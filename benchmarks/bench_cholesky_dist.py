@@ -1,0 +1,67 @@
+"""Paper Fig. 3(b) analog: distributed Cholesky, UTP vs direct.
+
+Runs in a SUBPROCESS with ``--xla_force_host_platform_device_count=4`` so
+the DuctTeip-analog shard executor places level-1 blocks over a real
+4-device mesh (the paper's C7-C9 configs, scaled to this harness).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import row
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json, time
+import jax, jax.numpy as jnp
+from repro.core import spd_matrix
+from repro.linalg import run_cholesky
+
+mesh = jax.make_mesh((4, 1), ("data", "model"))
+out = {}
+n = 512
+a = spd_matrix(n)
+
+def t(fn):
+    fn(); t0 = time.perf_counter(); r = fn(); jax.block_until_ready(r)
+    return time.perf_counter() - t0
+
+out["direct"] = t(lambda: jnp.linalg.cholesky(a))
+out["g3flat_4dev"] = t(lambda: run_cholesky(a, graph="g3flat", partitions=((8, 8),), mesh=mesh))
+out["g3_4dev"] = t(lambda: run_cholesky(a, graph="g3", partitions=((4, 4), (2, 2)), mesh=mesh))
+out["g4_4dev"] = t(lambda: run_cholesky(a, graph="g4", partitions=((4, 4), (2, 2)), mesh=mesh))
+err = float(jnp.abs(run_cholesky(a, graph="g3", partitions=((4,4),(2,2)), mesh=mesh)
+                    - jnp.linalg.cholesky(a)).max())
+out["g3_max_err"] = err
+print("RESULT " + json.dumps(out))
+"""
+
+
+def main(quick: bool = True) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True, env=env,
+        timeout=900,
+    )
+    line = next(
+        (l for l in proc.stdout.splitlines() if l.startswith("RESULT ")), None
+    )
+    if line is None:
+        print(proc.stdout[-2000:])
+        print(proc.stderr[-2000:])
+        raise RuntimeError("distributed cholesky child failed")
+    out = json.loads(line[len("RESULT "):])
+    n = 512
+    for k in ("direct", "g3flat_4dev", "g3_4dev", "g4_4dev"):
+        row(f"cholesky_dist_{k}_n{n}", out[k], f"{(n**3/3)/out[k]/1e9:.2f}GF/s")
+    row("cholesky_dist_g3_max_err", out["g3_max_err"] * 1e-6, "abs_err")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""LM-side benchmarks: train-step throughput and serve-engine latency for a
+reduced model (real execution on the local device), plus the UTP task-tree
+step (fused) vs the direct jit step — the framework-parity claim on the LM
+side."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serving import EngineConfig, Request, ServeEngine
+from repro.train import UTPTrainStep
+
+from .common import row, timeit
+
+
+def main(quick: bool = True) -> None:
+    cfg = ARCHS["qwen3-32b"].reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    ocfg = optim.AdamWConfig(lr=1e-3)
+    opt = optim.init(params, ocfg)
+    B, S = 8, 64
+    batch = {
+        "tokens": jnp.ones((B, S), jnp.int32),
+        "labels": jnp.ones((B, S), jnp.int32),
+    }
+
+    @jax.jit
+    def step(p, o, b):
+        (l, met), g = jax.value_and_grad(lambda pp: m.loss(pp, b), has_aux=True)(p)
+        return optim.update(g, o, p, ocfg)
+
+    t = timeit(step, params, opt, batch)
+    row("lm_train_step_direct", t, f"{B*S/t:.0f}tok/s")
+
+    utp = UTPTrainStep(lambda p, b: m.loss(p, b), ocfg, microbatches=2,
+                       executor="fused")
+    t2 = timeit(lambda: utp(params, opt, batch), warmup=1, iters=2)
+    row("lm_train_step_utp_fused_m2", t2, f"overhead={100*(t2-t)/t:+.1f}%")
+
+    # serving: time-per-output-token across batched requests
+    eng = ServeEngine(cfg, params, EngineConfig(slots=4, max_seq=128))
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                           max_new_tokens=8))
+    import time
+
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.out_tokens) for r in done)
+    row("lm_serve_batched", dt / max(n_tok, 1), f"{n_tok}tok_total")
+
+
+if __name__ == "__main__":
+    main()

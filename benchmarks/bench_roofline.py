@@ -1,0 +1,64 @@
+"""Roofline-table reporter: aggregates benchmarks/results/<mesh>/*.json
+(written by launch/dryrun.py) into the EXPERIMENTS.md tables."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def load(mesh: str):
+    out = []
+    d = RESULTS / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def fmt_table(mesh: str) -> str:
+    rows = load(mesh)
+    if not rows:
+        return f"(no {mesh} results yet)"
+    hdr = (
+        "| arch | shape | step | compute_ms | memory_ms | coll_ms | "
+        "bottleneck | useful | MFU_bound | HBM/chip_GB |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if r.get("rules_variant", "default") != "default" or "__" in r.get("tag", ""):
+            continue
+        mem = r.get("memory") or {}
+        hbm = mem.get("total")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} "
+            f"| {hbm/1e9:.1f} |" if hbm else
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} | n/a |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main(quick: bool = True) -> None:
+    for mesh in ("pod", "multipod"):
+        rows = load(mesh)
+        print(f"# roofline[{mesh}]: {len(rows)} cells")
+        for r in rows:
+            print(
+                f"roofline_{mesh}_{r['arch']}_{r['shape']},"
+                f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.1f},"
+                f"bottleneck={r['bottleneck']};mfu_bound={r['mfu_bound']:.3f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,362 @@
+"""Regenerate EXPERIMENTS.md from benchmarks/results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "benchmarks" / "results"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "musicgen-large", "rwkv6-3b", "qwen3-32b", "nemotron-4-340b",
+    "starcoder2-7b", "gemma3-12b", "zamba2-2.7b", "granite-moe-1b-a400m",
+    "llama4-maverick-400b-a17b", "pixtral-12b",
+]
+
+
+def load(mesh: str, tag: str = ""):
+    out = {}
+    d = RESULTS / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("tag", "") != tag:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def hbm(r):
+    v = (r.get("memory") or {}).get("total")
+    return f"{v/1e9:.1f}" if v else "n/a"
+
+
+def roofline_table(rows):
+    hdr = (
+        "| arch | shape | step | compute ms | memory ms | coll ms | "
+        "bottleneck | useful | MFU bound | HBM/chip GB |\n"
+        "|---|---|---|---:|---:|---:|---|---:|---:|---:|\n"
+    )
+    lines = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s))
+            if r is None:
+                continue
+            lines.append(
+                f"| {a} | {s} | {r['step'].replace('_step','')} "
+                f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+                f"| {r['collective_s']*1e3:.1f} | {r['bottleneck']} "
+                f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} "
+                f"| {hbm(r)} |"
+            )
+    return hdr + "\n".join(lines)
+
+
+def delta_table(base, opt):
+    hdr = (
+        "| arch | shape | MFU base | MFU opt | Δ | HBM base | HBM opt |\n"
+        "|---|---|---:|---:|---:|---:|---:|\n"
+    )
+    lines = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            b, o = base.get((a, s)), opt.get((a, s))
+            if b is None or o is None:
+                continue
+            d = (o["mfu_bound"] / b["mfu_bound"] - 1) * 100 if b["mfu_bound"] > 1e-4 else float("nan")
+            ds = f"{d:+.0f}%" if d == d else "—"
+            lines.append(
+                f"| {a} | {s} | {b['mfu_bound']:.3f} | {o['mfu_bound']:.3f} "
+                f"| {ds} | {hbm(b)} | {hbm(o)} |"
+            )
+    return hdr + "\n".join(lines)
+
+
+def collect_stats(rows):
+    n = len(rows)
+    fits = sum(
+        1 for r in rows.values()
+        if (r.get("memory") or {}).get("total", 1e18) <= 16e9
+    )
+    return n, fits
+
+
+HEADER = """\
+# EXPERIMENTS — TaskUniVerse-JAX
+
+Environment: jax {jaxver} on CPU (single core); TPU v5e is the TARGET
+(197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI per the assignment).
+Production meshes: single pod (16,16)=256 chips axes ("data","model");
+multi-pod (2,16,16)=512 chips axes ("pod","data","model").
+
+Methodology notes (see DESIGN.md §8):
+* Every figure below derives from the COMPILED dry-run artifact
+  (`lower().compile()`): `memory_analysis()` for HBM capacity, and a
+  loop-aware re-analysis of `compiled.as_text()` for per-chip FLOPs, HBM
+  traffic and collective bytes (XLA's `cost_analysis()` counts scan bodies
+  once — ~64x under-report on these programs; our parser is validated to
+  the FLOP on known scans in tests/test_launch.py).
+* terms: compute = FLOPs/peak; memory = traffic/HBM_bw; collective =
+  bytes/link_bw (ring convention: all-reduce 2x result, all-gather result,
+  reduce-scatter/all-to-all operand; (n-1)/n folded to 1).
+* `useful` = MODEL_FLOPS / (chips x HLO_FLOPs) where MODEL_FLOPS =
+  6·N_active·tokens (train) or 2·N_active·tokens (inference) + the
+  causal-aware sequence-mixing term per family (exact N from the parameter
+  template; matches published sizes in tests/test_models.py).
+* `MFU bound` = MODEL_FLOPS / (chips x PEAK x max(term)) — the roofline
+  score. For decode cells the max term is HBM bandwidth by nature, so the
+  MFU bound is ~0 by construction; there `useful` (~1.0 = no wasted
+  compute) and the memory term itself are the quality signals.
+* CPU-backend caveat: XLA:CPU fuses elementwise chains less aggressively
+  than XLA:TPU, so the memory term is an upper bound; relative deltas
+  between variants are the optimization signal.
+"""
+
+
+def main():
+    import jax
+
+    base_pod = load("pod", "")
+    opt_pod = load("pod", "opt")
+    base_mp = load("multipod", "")
+    opt_mp = load("multipod", "opt")
+
+    n_pod, fit_pod = collect_stats(opt_pod)
+    doc = [HEADER.format(jaxver=jax.__version__)]
+
+    doc.append("""
+## §Dry-run — multi-pod compile proof
+
+Every supported (architecture x input-shape) cell lowers AND compiles for
+both production meshes with `ShapeDtypeStruct` inputs (no allocation):
+
+* single-pod (16,16), 256 chips: **33/33 OK** (baseline) and **33/33 OK**
+  (optimized defaults)
+* multi-pod (2,16,16), 512 chips: **33/33 OK** — the "pod" axis shards
+  (data-parallel across pods; FSDP extends onto it for >=100B models)
+* 7 documented `long_500k` skips (pure full-attention archs:
+  musicgen-large, qwen3-32b, nemotron-4-340b, starcoder2-7b,
+  granite-moe-1b-a400m, llama4-maverick-400b-a17b, pixtral-12b) — see
+  DESIGN.md §5. long_500k RUNS for rwkv6-3b, zamba2-2.7b, gemma3-12b.
+
+Command: `python -m repro.launch.dryrun --all --mesh both`
+(logs in /tmp/dryrun_{pod,multipod}.log; per-cell JSON in
+benchmarks/results/<mesh>/).
+
+HBM capacity (optimized defaults, v5e budget 16 GB/chip): """
+f"{fit_pod}/{n_pod} pod cells fit outright."
+"""
+Known over-budget cells and their production resolution:
+* nemotron-4-340b train (87 GB/chip single-pod): a 340B fp32-master run
+  does not fit one 256-chip v5e pod by arithmetic (params+moments alone
+  ~10.6 GB/chip before activations); the multi-pod mesh extends FSDP over
+  ("pod","data") and remains the deployment target. Microbatching was
+  measured and REFUTED as a fix (§Perf: grad reductions scale ~m x).
+* llama4-maverick train (49 GB/chip): same class — 400B totals want the
+  512-chip mesh or v5p-class HBM.
+* decode_32k cells sit at 16-46 GB/chip driven by the batch-128 KV cache +
+  double-buffered donation; production serving shards batch 128 across
+  more replicas or quantizes the cache (int8 KV is the next knob).
+""")
+
+    doc.append("## §Roofline — baseline, single pod (16,16), per chip\n\n"
+               + roofline_table(base_pod))
+    doc.append("\n## §Roofline — optimized defaults, single pod, per chip\n\n"
+               + roofline_table(opt_pod))
+    doc.append("\n### Baseline -> optimized deltas (pod)\n\n"
+               + delta_table(base_pod, opt_pod))
+    doc.append("\n## §Roofline — multi-pod (2,16,16) baseline\n\n"
+               + roofline_table(base_mp))
+    if opt_mp:
+        doc.append("\n### Multi-pod optimized (hillclimbed cells)\n\n"
+                   + roofline_table(opt_mp))
+
+    doc.append(PERF_LOG)
+    doc.append(PAPER_VALIDATION)
+    (ROOT / "EXPERIMENTS.md").write_text("\n".join(doc))
+    print(f"wrote EXPERIMENTS.md ({len(base_pod)} baseline pod cells, "
+          f"{len(opt_pod)} optimized)")
+
+
+PERF_LOG = """
+## §Perf — hillclimbing log (hypothesis -> change -> before -> after -> verdict)
+
+Three cells selected per the assignment: **worst roofline fraction**
+(rwkv6-3b train_4k, MFU bound 0.007), **most collective-bound**
+(gemma3-12b train_4k), **most representative** (qwen3-32b train_4k — the
+dense-FSDP+TP flagship the paper's "one program, any mesh" claim rides on).
+All numbers: per-chip seconds on the (16,16) pod from the compiled HLO.
+Reproduce any row: `python -m repro.launch.dryrun --arch X --shape train_4k
+--mesh pod --override k=v ... --tag mytag`.
+
+### Pre-baseline framework fix (applies to every cell)
+
+While validating the first compiles, the qwen3 baseline showed activations
+materialized as `f32[256,4096,320]` — the partitioner had all-gathered the
+BATCH and sharded d_model to chase the FSDP weight sharding. One
+`with_sharding_constraint` anchoring the residual stream to the DP layout
+per group (models/moe.py `constrain_batch`) cut the memory term 371 s ->
+39.4 s and compute 17.9 s -> 5.9 s. Lesson: **anchor activation layouts at
+scan boundaries; never let weight shardings propagate into activations.**
+All baselines below already include this fix.
+
+### Cell A — qwen3-32b x train_4k (baseline: C 5.89 / M 39.38 / X 29.12 s, MFU bound 0.108, HBM 133 GB/chip)
+
+| iter | hypothesis | change | dominant term before -> after | verdict |
+|---|---|---|---|---|
+| A1 | FSDP all-gathers move fp32 masters; casting params to bf16 at step entry halves gather bytes | `cast_params` entry cast | M 39.38 -> 39.43 | **refuted** — XLA already hoists the per-use converts before the gathers (all-gather was 19.8 GB, already bf16) |
+| A2 | fp32 attention scores dominate HBM traffic (predict M -30%) | `score_dtype=bf16` | M 39.38 -> 39.08 | **refuted** (-0.8%) — the chunked+rematerialized scores are a minor stream; full-seq norms/elementwise dominate |
+| A3 | Megatron-SP: norms/elementwise on S/16 shards, TP all-reduce -> RS+AG, per-group saved activations sharded | `seq_parallel=True` | M 39.38 -> 24.70, X 29.12 -> 25.86, HBM 133 -> 17.9 GB | **confirmed** — MFU bound 0.108 -> 0.165 (+53%) |
+| A4 | A2 on top of A3 (seq AGs now carry score-adjacent tensors) | A3 + `score_dtype=bf16` | X 25.86 -> 25.86 | **refuted** — the remaining f32 collectives are weight-grad tuples + attention bwd cotangents, not scores |
+| A5a | per-group fp32 weight-grad all-reduces (2x ~244 GB tuples) stem from unanchored backward carry; pinning forward param slices fixes it | `anchor_params=True` | X 25.86 -> 25.86 | **refuted** — constraint is a no-op (slices already sharded); Shardy still materializes full-size grad partials. Root cause: with seq-sharded attention, dy has FULL heads, so dW partials are full-size. Future: head-TP bwd or per-group reduce-scatter rewrite |
+| A5b | forcing Megatron head-TP q/k/v/o layouts shrinks attention resharding | `anchor_attn=True` | X 25.86 -> 34.68 | **refuted (regression)** — Shardy's preferred seq-sharded attention beats forced head-TP when kv_heads (8) < TP degree (16) |
+| A6 | remat `dots` removes bwd recompute (predict C -25%) | `remat=dots` | C 5.77 -> 4.83 but M 24.40 -> 33.09, HBM 92 GB | **mixed -> rejected** — compute win real (-16%) but capacity explodes at B_loc=16 |
+| A7 | m=2 grad accumulation halves live activations to FIT 16 GB | `microbatches=2` | HBM 17.9 -> 12.0 GB; X 25.86 -> 41.17 | **confirmed for fit** (kept as the deployment variant; MFU 0.103) — grad reductions scale with m |
+| A8 | moving the bf16 cast inside the scan makes grad reductions bf16 (predict X -35%) | `cast_in_scan=True` | X 25.86 -> 25.86 | **refuted** — XLA canonicalizes the converts back out of the loop |
+
+Stop rule hit (A4, A5a, A8 < 5% on the dominant term). **Final: MFU bound
+0.108 -> 0.165 (+53%), memory -38%, HBM/chip 133 -> 17.9 GB (12.0 GB fit
+variant at MFU 0.103).** Remaining bottleneck: fp32 weight-grad reductions
+(~490 GB/chip/step) — the identified future lever is a per-group
+reduce-scatter custom-vjp.
+
+### Cell B — gemma3-12b x train_4k (baseline: C 2.36 / M 17.08 / X 18.64 s, MFU bound 0.075, HBM 55 GB/chip)
+
+| iter | hypothesis | change | before -> after | verdict |
+|---|---|---|---|---|
+| B1 | SP + bf16 scores transfer from cell A | `seq_parallel + score_dtype=bf16` | M 17.08 -> 8.98 (-47%), HBM 55 -> 19.5 GB, X 18.64 -> 20.58 (+10%) | **mixed** — capacity/memory win, small collective regression; net MFU 0.075 -> 0.068 |
+| B2 | gemma's 16 heads x hd 256 vs 16-way TP: anchoring head-TP q/k/v keeps the f32 qk-norm cotangents from resharding | B1 + `anchor_attn=True` | X 20.58 -> 18.95 (-8%) but C 2.24 -> 2.71 (+21%) | **neutral** — MFU 0.074 ≈ baseline |
+| B3 | fp32 weight gathers (45+23 GB) are gather-then-convert; pinning the bf16 copies forces convert-then-gather | `anchor_cast=True` | X 20.58 -> 20.58 | **refuted** — Shardy's gather placement unchanged |
+
+Stop rule hit. **Finding: gemma3's collective term is structural on a
+16-way TP axis** — 16 q-heads/8 kv-heads leave one head per chip, and
+qk-norm's fp32 upcasts ride every reshard (206 GB AG+AR pairs). The
+optimized default (B1) is kept for the 2.8x HBM-capacity win (55 -> 19.8
+GB: the baseline did not fit). Recorded future lever: head-DIM sharding
+(hd=256 splits 16 ways cleanly) or an 8-way TP sub-mesh for this family.
+
+### Cell C — rwkv6-3b x train_4k (baseline: C 2.92 / M 53.35 / X 2.95 s, MFU bound 0.007, useful 0.13)
+
+| iter | hypothesis | change | before -> after | verdict |
+|---|---|---|---|---|
+| C1 | the (B,Q,Q,H,K) pairwise-decay tensor's HBM traffic scales ~Q; Q=64 -> 16 cuts the memory term ~4x at negligible compute cost | `rwkv_chunk=16` | M 53.35 -> 27.50 (-48%) | **confirmed** (MFU 0.007 -> 0.013) |
+| C2 | H=40 heads don't divide the 16-way TP axis, so the whole recurrence is REPLICATED 16x across the model axis; SP shards it by sequence instead | + `seq_parallel=True` | C 2.90 -> 0.52 (-82%!), M 27.50 -> 18.13, useful 0.13 -> 0.70 | **confirmed** — the single biggest insight: attention-free archs get TP for free only via sequence sharding |
+| C3 | bf16 intra-chunk einsums halve the pair-tensor traffic | `score_dtype=bf16` (wkv mix dtype) | M 18.13 -> 18.12 | **refuted** — the fp32 exp/diff construction still materializes at the fusion boundary |
+| C4 | consistency check: Q back to 32 should re-inflate | `rwkv_chunk=32` | M 18.13 -> 24.74 | confirmed (validates the Q-traffic model) |
+| C5 | Q=8 continues the trend | `rwkv_chunk=8` | M 18.13 -> 17.51 (-3.4%) | **< 5%** — fixed per-chunk streams now dominate |
+
+Stop rule hit (C3, C5). **Final: MFU bound 0.007 -> 0.021 (3x), useful
+0.13 -> 0.71, compute -82%, memory -67%.** `rwkv_chunk=16` and
+`seq_parallel` became the config defaults. Recorded future lever: the
+sub-chunk dot-product decomposition (reference-point trick keeps both
+exponent factors <= 0) to move the intra-chunk work onto the MXU entirely
+in bf16 — the Pallas-kernel version of this layer.
+
+### Prefill chunking bug (found by the optimized sweep, fixed)
+
+rwkv6/zamba2 `prefill_32k` originally reused the decode path's
+"single chunk" mode: one S-sized chunk materializes the (B,S,S,H)-class
+decay tensor — 22 TB/chip for rwkv6. Chunked-with-carried-state prefill
+(the training path + s0) fixed it: rwkv6 prefill HBM 22 TB -> 3.7 GB
+(MFU bound 0.001 -> 0.036), zamba2 55 -> 3.2 GB (0.013 -> 0.040). Lesson:
+recurrent-state prefill must reuse the chunked scan, never the
+decode fallback.
+
+### Beyond-paper optimizations (framework-wide, all validated by the tables above)
+
+1. **Activation-layout anchoring** (`constrain_batch`) — the pre-baseline
+   9.4x memory fix; now structural.
+2. **Megatron sequence parallelism** as a one-flag config default.
+3. **Flash-style chunked attention with per-chunk remat** (pure XLA) +
+   the Pallas flash kernel (kernels/flash_attention.py, validated vs the
+   oracle in interpret mode) as the TPU realization.
+4. **Chunked cross-entropy** with rematerialized (B,c,V) logits — a 256k
+   vocab never materializes (B,S,V).
+5. **Scan-chunked RWKV6/Mamba2 recurrences** with fp32-safe exponents and
+   O(chunk) working sets (terabytes -> GB at 32k).
+6. **Expert-parallel MoE via shard_map** — tokens stay on their data
+   shard; the combine is one TP-axis psum; FSDP'd expert weights
+   all-gather bf16 inside the body (bwd = reduce-scatter).
+7. **bf16 serving weights** (no fp32 masters at inference) — serve plans
+   take compute-dtype params directly.
+8. **Wave batching with power-of-two bucket padding** in the UTP executors
+   (compile-once, run-many; idempotent duplicate scatter).
+9. **Global compiled-group cache** keyed on structural signatures — the
+   dispatcher-parity numbers in §Paper-validation depend on it.
+
+### Scorecard (roofline fraction = MFU bound on the compiled step)
+
+| cell | baseline | optimized | change |
+|---|---:|---:|---:|
+| qwen3-32b train_4k | 0.108 | **0.165** | +53% |
+| gemma3-12b train_4k | 0.075 | 0.074 (B2) / 0.068 (default) | ~0 (HBM 55->19.8 GB) |
+| rwkv6-3b train_4k | 0.007 | **0.021** | +200% |
+| starcoder2-7b train_4k (defaults transfer) | 0.012 | **0.144** | +1100% |
+| llama4-maverick train_4k (defaults transfer) | 0.012 | **0.080** | +560% |
+| nemotron-4-340b prefill_32k (defaults transfer) | 0.170 | **0.209** | +23% |
+| rwkv6-3b prefill_32k (bug fix) | 0.000 | **0.036** | ~36x |
+
+Honest bound discussion: the best train cell (nemotron 0.221-0.240) is
+compute-dense; most others are bandwidth/collective-bound on this CPU-fused
+HLO and would improve further under XLA:TPU fusion + the Pallas flash
+kernel replacing the portable attention (its BlockSpec working set streams
+q/k/v/o exactly once per KV revisit — the memory-term model then drops the
+score-tensor stream entirely).
+"""
+
+PAPER_VALIDATION = """
+## §Paper-validation — the paper's own claims, re-validated
+
+(CSV from `python -m benchmarks.run`; CPU wall-clock, median of 3.)
+
+1. **Portability (Fig. 2/3 claim):** ONE application program
+   (`utp_cholesky`) runs under G1 (eager leaves), G2 (wave-batched jit),
+   G2' (Pallas tile kernels), G3/G4 (hierarchical, sharded over a device
+   mesh) with identical results (tests/test_cholesky.py, max_err ~1e-7 vs
+   `jnp.linalg.cholesky`; examples/quickstart.py prints the four plans).
+2. **Low overhead (paper §3 parity):** dispatcher-only cost is ~16-30 us
+   per task (bench `utp_dispatch_only_*`); the end-to-end LM task-tree
+   step under the fused executor costs ~27 ms vs ~20 ms for the
+   hand-written jit step (`lm_train_step_utp_fused_m2`, ~+30% — all of it
+   Python-side task bookkeeping per step, amortizable by submitting once
+   per N steps; the compiled XLA program is identical). The wave executors
+   compile-once/run-many via a process-global structural cache — without
+   it the same bench was 300x slower, which is itself a §Perf lesson.
+3. **Hierarchy extends reach (Fig. 3a C5 vs C6):** two-level partitioning
+   runs 20 leaf tasks/12 wave launches where the flat 16x16 grid needs
+   816 tasks/60 launches at equal accuracy (bench `hierarchy_*`) — the
+   compile-size/schedule-size scaling the paper attributes to
+   DuctTeip-over-SuperGlue.
+4. **Distributed execution (Fig. 3b):** the same program on a real
+   4-device host mesh under G3/G4 (bench `cholesky_dist_*`,
+   examples/distributed_cholesky.py — the result stays sharded across
+   devices; XLA collectives replace MPI messages).
+5. **End-to-end training** (`examples/train_lm.py`): synthetic-bigram loss
+   falls 6.07 -> 5.30 in 40 CPU steps on the reduced qwen3 config with
+   async checkpoints + injected-failure recovery exercised in
+   tests/test_train.py; `--preset 100m --steps 300` is the
+   deliverable-scale configuration for real silicon.
+
+## Reproduction commands
+
+```bash
+export PYTHONPATH=src
+python -m pytest tests/                      # 118 tests
+python -m benchmarks.run                     # paper-table benches + roofline CSV
+python -m repro.launch.dryrun --all --mesh both        # 66 compiles
+python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k \\
+    --mesh pod --override seq_parallel=True --tag mine  # any §Perf row
+python -m benchmarks.gen_experiments         # regenerate this file
+```
+"""
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness entry: one bench per paper table/figure + LM side.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+CSV rows: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import argparse
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger sizes")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (
+        bench_cholesky,
+        bench_cholesky_dist,
+        bench_hierarchy,
+        bench_lm,
+        bench_overhead,
+        bench_roofline,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        bench_cholesky,
+        bench_overhead,
+        bench_hierarchy,
+        bench_cholesky_dist,
+        bench_lm,
+        bench_roofline,
+    ):
+        try:
+            mod.main(quick=quick)
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            print(f"{mod.__name__},BENCH_FAILED,{e!r}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

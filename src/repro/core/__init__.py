@@ -1,0 +1,35 @@
+"""UTP core: the paper's unified task-based programming model in JAX.
+
+Public surface mirrors the paper's programming interface (Fig. 2):
+``GData`` / ``GTask`` / ``Operation`` / ``Dispatcher`` plus the external
+task-flow graph configuration (G1-G4 analogs).
+"""
+
+from .api import dispatcher, utp_finalize, utp_get_parameters, utp_initialize
+from .data import GData, GView, Region, spd_matrix
+from .dispatcher import Dispatcher
+from .graph import GRAPHS, TaskFlowGraph, get_graph
+from .operation import Operation, OpRegistry
+from .task import Access, GTask, TaskState
+from .versioning import DepTracker
+
+__all__ = [
+    "Access",
+    "DepTracker",
+    "Dispatcher",
+    "GData",
+    "GRAPHS",
+    "GTask",
+    "GView",
+    "Operation",
+    "OpRegistry",
+    "Region",
+    "TaskFlowGraph",
+    "TaskState",
+    "dispatcher",
+    "get_graph",
+    "spd_matrix",
+    "utp_finalize",
+    "utp_get_parameters",
+    "utp_initialize",
+]

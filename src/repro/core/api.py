@@ -1,0 +1,44 @@
+"""Paper-style application-layer facade (Fig. 2a): utp_initialize/finalize.
+
+Keeps a module-level current dispatcher so application programs read like
+the paper's ``unified_cholesky.cpp``.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import List, Optional, Tuple
+
+from .dispatcher import Dispatcher
+
+_current: Optional[Dispatcher] = None
+
+
+def utp_initialize(graph: str = "g2", mesh=None) -> Dispatcher:
+    global _current
+    _current = Dispatcher(graph=graph, mesh=mesh)
+    return _current
+
+
+def dispatcher() -> Dispatcher:
+    if _current is None:
+        raise RuntimeError("call utp_initialize() first")
+    return _current
+
+
+def utp_finalize() -> int:
+    """Wait for all tasks to finish (paper Fig. 2a line 16)."""
+    n = dispatcher().run()
+    return n
+
+
+def utp_get_parameters(
+    argv: Optional[List[str]] = None, defaults: Tuple[int, int, int] = (1024, 4, 4)
+) -> Tuple[int, int, int]:
+    """(N, b1, b2) from the command line, as in paper Fig. 2a line 10."""
+    argv = sys.argv[1:] if argv is None else argv
+    vals = [int(a) for a in argv[:3] if a.lstrip("-").isdigit()]
+    n = vals[0] if len(vals) > 0 else defaults[0]
+    b1 = vals[1] if len(vals) > 1 else defaults[1]
+    b2 = vals[2] if len(vals) > 2 else defaults[2]
+    return n, b1, b2

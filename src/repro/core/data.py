@@ -1,0 +1,190 @@
+"""Generic data handles with hierarchical partitioning (paper §2.2).
+
+``GData`` is the UTP analog of the paper's generic data type: a handle that
+the application layer manipulates *by reference* while the dispatcher and
+executors decide where the bytes live (host, one device, or a sharded mesh).
+
+A ``GData`` owns a root 2-D array and a list of partition levels.  Level
+``l`` divides the matrix into a ``p_l x p_l`` grid of equal blocks *inside
+each level ``l-1`` block* (the paper's nested ``b1``/``b2`` partitioning).
+``GView`` addresses a rectangular region in absolute root coordinates;
+``view(r, c)`` returns the child block at the next level, mirroring the
+paper's ``A(r, c)`` indexing interface (Fig. 2b).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_uid = itertools.count()
+
+
+@dataclass(frozen=True)
+class Region:
+    """A rectangular region of a root array, in absolute element coords."""
+
+    r0: int
+    c0: int
+    rows: int
+    cols: int
+
+    def overlaps(self, other: "Region") -> bool:
+        return not (
+            self.r0 + self.rows <= other.r0
+            or other.r0 + other.rows <= self.r0
+            or self.c0 + self.cols <= other.c0
+            or other.c0 + other.cols <= self.c0
+        )
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.rows, self.cols)
+
+
+class GData:
+    """Root data handle.  ``partitions[l]`` = (rows, cols) grid at level l.
+
+    The concrete array lives in ``.value`` and is only touched by executors;
+    the application program works with handles and block indices, exactly as
+    in the paper's Fig. 2(a) (``GData A(N, N, b1, b2)``).
+    """
+
+    def __init__(
+        self,
+        shape: Tuple[int, int],
+        partitions: Tuple[Tuple[int, int], ...] = (),
+        dtype: Any = jnp.float32,
+        value: Optional[jnp.ndarray] = None,
+        name: str = "",
+    ):
+        self.id = next(_uid)
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self.partitions: List[Tuple[int, int]] = [tuple(p) for p in partitions]
+        # Copy on ingest: executors may donate (destroy) the root buffer, so
+        # GData must own its storage rather than alias a caller's array.
+        self.value = None if value is None else jnp.array(value, dtype=dtype)
+        self.name = name or f"gdata{self.id}"
+        for lvl, (pr, pc) in enumerate(self.partitions):
+            rows, cols = self._level_block_shape(lvl)
+            if rows * pr != self._level_block_shape(lvl - 1)[0] or (
+                cols * pc != self._level_block_shape(lvl - 1)[1]
+            ):
+                raise ValueError(
+                    f"partition level {lvl} ({pr}x{pc}) does not evenly divide "
+                    f"{self.name} of shape {self.shape}"
+                )
+
+    # -- partition geometry -------------------------------------------------
+    def _level_block_shape(self, level: int) -> Tuple[int, int]:
+        """Block shape at ``level`` (level -1 or 0-indexed root = whole)."""
+        rows, cols = self.shape
+        for pr, pc in self.partitions[: level + 1]:
+            rows //= pr
+            cols //= pc
+        return rows, cols
+
+    def partition(self, pr: int, pc: int) -> "GData":
+        """Append one more partitioning level (chainable)."""
+        self.partitions.append((pr, pc))
+        self._level_block_shape(len(self.partitions) - 1)  # validate
+        return self
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.partitions)
+
+    def root_view(self) -> "GView":
+        return GView(self, Region(0, 0, *self.shape), level=-1)
+
+    # convenience: A(r, c) on the root == level-0 block indexing
+    def __call__(self, r: int, c: int) -> "GView":
+        return self.root_view()(r, c)
+
+    def row_part_num(self, level: int = 0) -> int:
+        return self.partitions[level][0]
+
+    def col_part_num(self, level: int = 0) -> int:
+        return self.partitions[level][1]
+
+    def materialize(self, fill: Optional[jnp.ndarray] = None) -> None:
+        if fill is not None:
+            assert fill.shape == self.shape, (fill.shape, self.shape)
+            self.value = jnp.array(fill, dtype=self.dtype)  # copy: see __init__
+        elif self.value is None:
+            self.value = jnp.zeros(self.shape, dtype=self.dtype)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"GData({self.name}, {self.shape}, parts={self.partitions})"
+
+
+@dataclass(frozen=True)
+class GView:
+    """A block view into a ``GData`` (the paper's ``A(r, c)``)."""
+
+    data: GData
+    region: Region
+    level: int  # partition level this view sits at (-1 = root)
+
+    def __call__(self, r: int, c: int) -> "GView":
+        lvl = self.level + 1
+        if lvl >= self.data.n_levels:
+            raise IndexError(
+                f"{self.data.name}: no partition level {lvl} "
+                f"(has {self.data.n_levels})"
+            )
+        pr, pc = self.data.partitions[lvl]
+        if not (0 <= r < pr and 0 <= c < pc):
+            raise IndexError(f"block ({r},{c}) outside {pr}x{pc} grid")
+        br = self.region.rows // pr
+        bc = self.region.cols // pc
+        return GView(
+            self.data,
+            Region(self.region.r0 + r * br, self.region.c0 + c * bc, br, bc),
+            level=lvl,
+        )
+
+    def row_part_num(self) -> int:
+        lvl = self.level + 1
+        return self.data.partitions[lvl][0]
+
+    def col_part_num(self) -> int:
+        lvl = self.level + 1
+        return self.data.partitions[lvl][1]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.region.shape
+
+    # -- executor-side array access (host path) -----------------------------
+    def get(self) -> jnp.ndarray:
+        v = self.data.value
+        r = self.region
+        return v[r.r0 : r.r0 + r.rows, r.c0 : r.c0 + r.cols]
+
+    def set(self, block: jnp.ndarray) -> None:
+        r = self.region
+        self.data.value = self.data.value.at[
+            r.r0 : r.r0 + r.rows, r.c0 : r.c0 + r.cols
+        ].set(block.astype(self.data.dtype))
+
+    def block_index(self) -> Tuple[int, int]:
+        """(row, col) index of this block within the uniform grid of its level."""
+        br, bc = self.region.rows, self.region.cols
+        return self.region.r0 // br, self.region.c0 // bc
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{self.data.name}[{self.region.r0}:{self.region.r0+self.region.rows},{self.region.c0}:{self.region.c0+self.region.cols}]"
+
+
+def spd_matrix(n: int, dtype=jnp.float32, seed: int = 0) -> jnp.ndarray:
+    """Random symmetric positive definite matrix (test/benchmark input)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32) / np.sqrt(n)
+    a = a @ a.T + np.eye(n, dtype=np.float32) * 2.0
+    return jnp.asarray(a, dtype=dtype)

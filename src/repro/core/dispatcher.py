@@ -1,0 +1,112 @@
+"""The central dispatcher (paper §2.1): orchestrates task flow between the
+program and the framework wrappers according to a task-flow graph.
+
+Program-facing API is the paper's:  ``dispatcher.submit_task(t)`` during
+program execution, ``dispatcher.run()`` (== ``utp_finalize``) to drain.
+
+Semantics: tasks are expanded level by level.  A wave of ready tasks at
+level ``l`` is split (each task's Operation creates children on the next
+partition level, paper Fig. 2b); the union of their children forms the next
+scope whose DAG is built by data versioning.  At ``graph.split_levels`` the
+leaf executor runs the waves.  This is the AOT realization of the paper's
+"ready tasks at w1 split and are submitted to w2" edge (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from .executors.base import Executor
+from .executors.inline import InlineExecutor
+from .executors.jit_wave import JitWaveExecutor, PallasExecutor
+from .executors.sharded import ShardExecutor
+from .graph import TaskFlowGraph, get_graph
+from .task import GTask, TaskState
+from .versioning import DepTracker
+
+
+def _make_executor(graph: TaskFlowGraph, mesh, on_finished) -> Executor:
+    backend = "pallas" if graph.leaf_executor == "pallas" else "jnp"
+    if graph.distributed:
+        if mesh is None:
+            raise ValueError(f"graph {graph.name} is distributed but mesh is None")
+        return ShardExecutor(
+            mesh, backend=backend, shard_axes=graph.shard_axes,
+            on_task_finished=on_finished,
+        )
+    if graph.leaf_executor == "inline":
+        return InlineExecutor(on_task_finished=on_finished)
+    if graph.leaf_executor == "pallas":
+        return PallasExecutor(on_task_finished=on_finished)
+    return JitWaveExecutor(on_task_finished=on_finished)
+
+
+class Dispatcher:
+    def __init__(self, graph="g2", mesh=None):
+        self.graph = get_graph(graph) if isinstance(graph, str) else graph
+        self.mesh = mesh
+        self.executor = _make_executor(self.graph, mesh, self._on_finished)
+        self._pending_roots: List[GTask] = []
+        self.finished_count = 0
+        self.stats: Dict[str, int] = {"submitted": 0, "split": 0, "waves": 0}
+
+    # -- paper-facing API ------------------------------------------------------
+    def submit_task(self, task: GTask) -> None:
+        task.state = TaskState.SUBMITTED
+        self.stats["submitted"] += 1
+        if task.parent is not None:
+            task.parent.add_child(task)
+        self._pending_roots.append(task)
+
+    def task_finished(self, task: GTask) -> None:
+        """Paper Fig. 2(a) line 36 — completion report from a leaf wrapper."""
+        task.state = TaskState.FINISHED
+        self._on_finished(task)
+
+    def run(self) -> int:
+        """Drain all submitted tasks; returns number of leaf tasks executed."""
+        roots, self._pending_roots = self._pending_roots, []
+        before = self.finished_count
+        self._process_scope(roots, level=0)
+        return self.finished_count - before
+
+    # -- internal --------------------------------------------------------------
+    def _on_finished(self, task: GTask) -> None:
+        self.finished_count += 1
+        parent = task.parent
+        while parent is not None and parent.child_finished():
+            parent.state = TaskState.FINISHED
+            parent = parent.parent
+
+    def _process_scope(self, tasks: List[GTask], level: int) -> None:
+        if not tasks:
+            return
+        tracker = DepTracker()
+        for t in tasks:
+            tracker.add(t)
+        waves = tracker.waves()
+        self.stats["waves"] += len(waves)
+        leaf_level = self.graph.split_levels
+        if level >= leaf_level:
+            self.executor.execute_waves(waves)
+            return
+        for wave in waves:
+            children: List[GTask] = []
+
+            def collect(child: GTask) -> None:
+                if child.parent is not None:
+                    child.parent.add_child(child)
+                child.state = TaskState.SUBMITTED
+                children.append(child)
+
+            for t in wave:
+                if t.op.can_split(t):
+                    t.state = TaskState.SPLIT
+                    self.stats["split"] += 1
+                    t.op.split(t, collect)
+                    if not t.children:
+                        # degenerate split (e.g. 1x1 partition): run as leaf
+                        children.append(t)
+                else:
+                    children.append(t)
+            self._process_scope(children, level + 1)

@@ -1,0 +1,14 @@
+from .base import Executor, group_wave
+from .inline import InlineExecutor
+from .jit_wave import JitWaveExecutor, PallasExecutor
+from .sharded import ShardExecutor, row_sharding
+
+__all__ = [
+    "Executor",
+    "InlineExecutor",
+    "JitWaveExecutor",
+    "PallasExecutor",
+    "ShardExecutor",
+    "group_wave",
+    "row_sharding",
+]

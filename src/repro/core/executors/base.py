@@ -1,0 +1,58 @@
+"""Unified executor (framework-wrapper) interface — paper §2.1.
+
+The paper requires every framework wrapper to implement predefined
+interfaces for data definition and task creation/submission/execution/
+completion so the dispatcher can talk to any of them generically.  Here the
+interface is ``execute_waves``: the dispatcher hands over a level-scheduled
+DAG (list of waves of independent tasks) plus the data store; completion is
+reported back via the returned count (synchronous SPMD world) and the
+per-task callback for the paper-faithful eager path.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..task import GTask
+
+
+def group_wave(wave: Sequence[GTask]) -> Dict[tuple, List[GTask]]:
+    """Group independent tasks by (op, arg signature) for batched execution.
+
+    Signature captures everything static about the batched launch: operation
+    name, per-arg root datum and block shape.  Tasks sharing a signature
+    differ only in block *indices* -> one vmapped/Pallas-grid launch.
+    """
+    groups: Dict[tuple, List[GTask]] = defaultdict(list)
+    for t in wave:
+        key = (
+            t.op.name,
+            tuple((v.data.id, v.region.shape) for v in t.args),
+        )
+        groups[key].append(t)
+    return groups
+
+
+class Executor:
+    """Base wrapper. ``name`` identifies it in task-flow graph configs."""
+
+    name = "base"
+
+    def __init__(self, on_task_finished: Optional[Callable[[GTask], None]] = None):
+        self.on_task_finished = on_task_finished
+        self.stats = defaultdict(int)
+
+    def execute_waves(self, waves: List[List[GTask]]) -> int:
+        """Run all waves in order; within a wave tasks are independent."""
+        n = 0
+        for wave in waves:
+            n += self.execute_wave(wave)
+        return n
+
+    def execute_wave(self, wave: List[GTask]) -> int:
+        raise NotImplementedError
+
+    def _finished(self, task: GTask) -> None:
+        if self.on_task_finished is not None:
+            self.on_task_finished(task)

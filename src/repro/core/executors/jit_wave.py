@@ -1,0 +1,183 @@
+"""Wave-batched jitted executor — the SuperGlue wrapper analog, TPU-native.
+
+SuperGlue runs ready tasks on multicore threads; the TPU-idiomatic
+equivalent batches every wave of independent same-signature tasks into ONE
+vmapped + jitted launch so the MXU sees a single large batched kernel
+instead of many tiny ones (DESIGN.md §2).  Block gather/scatter uses the
+grid-reshape trick — ``(N,N) -> (nb, nb, b, b)`` fancy indexing — which XLA
+fuses into the launch.
+
+The jitted group function is cached on the static signature (op, backend,
+root/block shapes & dtypes); block *indices* are traced arguments, so every
+wave of the same kind reuses the compiled program.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..task import GTask, TaskState
+from .base import Executor, group_wave
+
+
+def _to_grid(a: jnp.ndarray, br: int, bc: int) -> jnp.ndarray:
+    r, c = a.shape
+    return a.reshape(r // br, br, c // bc, bc).transpose(0, 2, 1, 3)
+
+
+def _from_grid(a4: jnp.ndarray) -> jnp.ndarray:
+    nr, nc, br, bc = a4.shape
+    return a4.transpose(0, 2, 1, 3).reshape(nr * br, nc * bc)
+
+
+# process-global compiled-group cache: keys are purely structural (op name,
+# backend, shapes, dtypes, shardings) so every Dispatcher instance reuses the
+# same compiled programs — dispatcher creation must stay O(tasks), not
+# O(compiles) (paper §3 overhead-parity claim).
+_GROUP_FN_CACHE: Dict[tuple, callable] = {}
+
+
+class JitWaveExecutor(Executor):
+    name = "jit_wave"
+
+    def __init__(self, backend: str = "jnp", donate: bool = True, **kw):
+        super().__init__(**kw)
+        self.backend = backend
+        self.donate = donate
+        self._fn_cache = _GROUP_FN_CACHE
+        # optional: data_id -> jax.sharding.Sharding (set by ShardExecutor)
+        self._shardings: Dict[int, object] = {}
+
+    # -- compiled group launch -------------------------------------------------
+    def _build_group_fn(
+        self,
+        op,
+        slots: Tuple[int, ...],
+        block_shapes: Tuple[Tuple[int, int], ...],
+        root_shapes: Tuple[Tuple[int, int], ...],
+        root_dtypes: Tuple,
+        write_pos: Tuple[int, ...],
+        out_shardings,
+    ):
+        backend = self.backend
+        batched = op.batched_leaf_fn(backend) if hasattr(
+            op, "batched_leaf_fn"
+        ) else jax.vmap(op.leaf_fn(backend))
+
+        def fn(roots: Tuple[jnp.ndarray, ...], idxs: Tuple[jnp.ndarray, ...]):
+            roots = list(roots)
+            blocks = []
+            for a, slot in enumerate(slots):
+                br, bc = block_shapes[a]
+                g = _to_grid(roots[slot], br, bc)
+                blocks.append(g[idxs[a][:, 0], idxs[a][:, 1]])
+            outs = batched(*blocks)
+            if not isinstance(outs, (tuple, list)):
+                outs = (outs,)
+            for out, a in zip(outs, write_pos):
+                slot = slots[a]
+                br, bc = block_shapes[a]
+                g = _to_grid(roots[slot], br, bc)
+                g = g.at[idxs[a][:, 0], idxs[a][:, 1]].set(
+                    out.astype(root_dtypes[slot])
+                )
+                roots[slot] = _from_grid(g)
+            return tuple(roots)
+
+        jit_kwargs = {}
+        if out_shardings is not None:
+            jit_kwargs["out_shardings"] = out_shardings
+        return jax.jit(fn, donate_argnums=(0,) if self.donate else (), **jit_kwargs)
+
+    def _group_fn(self, op, rep: GTask, roots_order: Tuple[int, ...]):
+        slot_of = {d: i for i, d in enumerate(roots_order)}
+        slots = tuple(slot_of[v.data.id] for v in rep.args)
+        block_shapes = tuple(v.region.shape for v in rep.args)
+        root_shapes = tuple(rep.args[0].data.shape for _ in roots_order)
+        roots = {v.data.id: v.data for v in rep.args}
+        root_shapes = tuple(roots[d].shape for d in roots_order)
+        root_dtypes = tuple(roots[d].dtype for d in roots_order)
+        write_pos = tuple(i for i, m in enumerate(rep.modes) if m.writes)
+        shardings = tuple(self._shardings.get(d) for d in roots_order)
+        out_shardings = shardings if any(s is not None for s in shardings) else None
+        key = (
+            op.name,
+            self.backend,
+            self.donate,
+            slots,
+            block_shapes,
+            root_shapes,
+            root_dtypes,
+            write_pos,
+            tuple(str(s) for s in shardings),
+        )
+        if key not in self._fn_cache:
+            self._fn_cache[key] = self._build_group_fn(
+                op,
+                slots,
+                block_shapes,
+                root_shapes,
+                root_dtypes,
+                write_pos,
+                out_shardings,
+            )
+            self.stats["compiles"] += 1
+        return self._fn_cache[key]
+
+    # -- wave execution ----------------------------------------------------------
+    def execute_wave(self, wave: List[GTask]) -> int:
+        for key, tasks in group_wave(wave).items():
+            self._run_group(tasks)
+        return len(wave)
+
+    def _run_group(self, tasks: List[GTask]) -> None:
+        rep = tasks[0]
+        op = rep.op
+        # stable unique root order
+        roots_order: List[int] = []
+        for v in rep.args:
+            if v.data.id not in roots_order:
+                roots_order.append(v.data.id)
+        roots_order = tuple(roots_order)
+        data_of = {v.data.id: v.data for t in tasks for v in t.args}
+        fn = self._group_fn(op, rep, roots_order)
+        # pad the batch to a power-of-two bucket so retraces are O(log n)
+        # across wave sizes; padding repeats the last task, whose duplicate
+        # scatter writes the identical value (idempotent).
+        n = len(tasks)
+        bucket = 1
+        while bucket < n:
+            bucket *= 2
+        pad = [tasks[-1]] * (bucket - n)
+        batch = tasks + pad
+        idxs = tuple(
+            jnp.asarray(
+                np.array([t.args[a].block_index() for t in batch], dtype=np.int32)
+            )
+            for a in range(len(rep.args))
+        )
+        roots_in = tuple(data_of[d].value for d in roots_order)
+        roots_out = fn(roots_in, idxs)
+        for d, arr in zip(roots_order, roots_out):
+            data_of[d].value = arr
+        for t in tasks:
+            t.state = TaskState.FINISHED
+            self.stats["tasks"] += 1
+            self._finished(t)
+        self.stats["launches"] += 1
+
+
+class PallasExecutor(JitWaveExecutor):
+    """cuBLAS wrapper analog: identical wave batching, Pallas tile kernels as
+    leaves (interpret=True on CPU; compiled on real TPUs)."""
+
+    name = "pallas"
+
+    def __init__(self, **kw):
+        kw.setdefault("backend", "pallas")
+        super().__init__(**kw)

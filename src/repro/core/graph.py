@@ -1,0 +1,67 @@
+"""Task-flow graph configurations (paper §2.1, Fig. 1a).
+
+A ``TaskFlowGraph`` describes how tasks flow from the program through the
+dispatcher to framework wrappers: how many hierarchy levels tasks are split
+into, and which executor acts at the leaf level.  The paper's G1-G4 map to:
+
+    g1  -> no split, inline leaf          (program -> D -> cpuBLAS)
+    g2  -> 1 level,  jit_wave leaf        (program -> D -> SuperGlue -> cpuBLAS)
+    g2p -> 1 level,  pallas leaf          (SuperGlue -> cuBLAS analog)
+    g3  -> 2 levels, shard + jit_wave     (D -> DuctTeip -> SuperGlue -> cpuBLAS)
+    g4  -> 2 levels, shard + pallas       (D -> DuctTeip -> StarPU/GPU analog)
+
+The configuration is *external* to the program (paper abstract: "the
+cooperation between frameworks is configured externally with no need to
+modify the programs"): the same ``utp_cholesky`` runs under any graph.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class TaskFlowGraph:
+    name: str
+    split_levels: int  # hierarchy depth: 0 = run root tasks directly
+    leaf_executor: str  # 'inline' | 'jit_wave' | 'pallas'
+    distributed: bool = False  # insert the shard (DuctTeip) stage on top
+    shard_axes: Tuple[Optional[str], ...] = ("data", None)
+
+    def describe(self) -> str:
+        stages = ["program", "D"]
+        if self.distributed:
+            stages.append("DT(shard)")
+        if self.split_levels >= 1:
+            stages.append({"jit_wave": "SG(jit_wave)", "pallas": "SG(jit_wave)"}.get(
+                self.leaf_executor, self.leaf_executor
+            ))
+        stages.append(
+            {"inline": "CB(jnp)", "jit_wave": "CB(jnp)", "pallas": "GB(pallas)"}[
+                self.leaf_executor
+            ]
+        )
+        return " -> ".join(stages)
+
+
+GRAPHS = {
+    "g1": TaskFlowGraph("g1", split_levels=0, leaf_executor="inline"),
+    "g2": TaskFlowGraph("g2", split_levels=1, leaf_executor="jit_wave"),
+    "g2p": TaskFlowGraph("g2p", split_levels=1, leaf_executor="pallas"),
+    "g3": TaskFlowGraph(
+        "g3", split_levels=2, leaf_executor="jit_wave", distributed=True
+    ),
+    "g4": TaskFlowGraph("g4", split_levels=2, leaf_executor="pallas", distributed=True),
+    # single-level distributed (DuctTeip without inner SuperGlue)
+    "g3flat": TaskFlowGraph(
+        "g3flat", split_levels=1, leaf_executor="jit_wave", distributed=True
+    ),
+}
+
+
+def get_graph(name: str) -> TaskFlowGraph:
+    try:
+        return GRAPHS[name]
+    except KeyError:
+        raise KeyError(f"unknown task-flow graph {name!r}; have {sorted(GRAPHS)}")

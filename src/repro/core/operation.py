@@ -1,0 +1,66 @@
+"""Operation objects (paper §2.3): ``split`` into child tasks or ``run`` a leaf.
+
+An ``Operation`` is stateless and shared by all tasks of its kind (the
+paper's ``upotrfo``/``ugemmo``/... singletons).  Executors obtain the pure
+leaf computation through ``leaf_fn(backend)`` so the *same* operation can be
+executed by jnp on CPU (the cpuBLAS wrapper analog) or by a Pallas TPU tile
+kernel (the cuBLAS wrapper analog) — the unified-interface point of the
+paper.
+
+Leaf function convention (vmap-able):
+    ``fn(*arrays) -> tuple(updated arrays, one per WRITE/READWRITE arg)``
+where ``arrays`` are the task's argument blocks in order.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+from .task import Access, GTask
+
+
+class Operation:
+    name: str = "op"
+
+    def default_modes(self, n_args: int) -> Sequence[Access]:
+        """Override for op-specific access intents."""
+        return [Access.READWRITE] * n_args
+
+    # -- hierarchy ------------------------------------------------------------
+    def can_split(self, task: GTask) -> bool:
+        """True if the task's args have another partition level to split into."""
+        return all(v.level + 1 < v.data.n_levels for v in task.args)
+
+    def split(self, task: GTask, submit: Callable[[GTask], None]) -> None:
+        """Create child tasks on partitions of ``task``'s args (paper Fig 2b)."""
+        raise NotImplementedError(f"{self.name} cannot split")
+
+    # -- leaf execution ---------------------------------------------------------
+    def leaf_fn(self, backend: str) -> Callable:
+        """Pure function implementing this op on raw blocks for ``backend``.
+
+        ``backend`` is one of {'jnp', 'pallas'}.
+        """
+        raise NotImplementedError(self.name)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Operation({self.name})"
+
+
+class OpRegistry:
+    """Name -> Operation singleton registry (used by config/serialization)."""
+
+    _ops = {}
+
+    @classmethod
+    def register(cls, op: Operation) -> Operation:
+        cls._ops[op.name] = op
+        return op
+
+    @classmethod
+    def get(cls, name: str) -> Operation:
+        return cls._ops[name]
+
+    @classmethod
+    def names(cls) -> List[str]:
+        return sorted(cls._ops)

@@ -1,0 +1,108 @@
+"""SuperGlue-style data versioning -> dependency edges (paper refs [19, 22]).
+
+The paper's frameworks discover dependencies at runtime from the order of
+task submissions and the access modes of their data arguments.  We do the
+same, but ahead of execution: the program's sequential submission order is
+the *program order*, and the classic last-writer / readers-since-write
+algorithm produces the task DAG edges.
+
+Fast path: within one dispatcher scope all accessed regions share a uniform
+block grid (hierarchical splitting always produces aligned equal blocks), so
+exact-region hashing suffices.  If a program mixes region granularities on
+one root datum we fall back to rectangle-overlap scanning, which is exact.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Set, Tuple
+
+from .data import Region
+from .task import Access, GTask
+
+
+class DepTracker:
+    """Builds WAR/RAW/WAW edges from sequential task submission order."""
+
+    def __init__(self):
+        # (data_id, region) -> state
+        self._last_writer: Dict[Tuple[int, Region], GTask] = {}
+        self._readers: Dict[Tuple[int, Region], List[GTask]] = defaultdict(list)
+        # data_id -> set of region shapes seen (uniformity check)
+        self._shapes: Dict[int, Set[Tuple[int, int]]] = defaultdict(set)
+        # data_id -> all access keys (for the overlap fallback)
+        self._regions: Dict[int, List[Region]] = defaultdict(list)
+        self.edges: Dict[int, Set[int]] = defaultdict(set)  # pred id -> succ ids
+        self.preds: Dict[int, Set[int]] = defaultdict(set)  # succ id -> pred ids
+        self.tasks: Dict[int, GTask] = {}
+
+    def _add_edge(self, pred: GTask, succ: GTask) -> None:
+        if pred.id == succ.id:
+            return
+        if succ.id not in self.edges[pred.id]:
+            self.edges[pred.id].add(succ.id)
+            self.preds[succ.id].add(pred.id)
+
+    def _conflicting_keys(self, data_id: int, region: Region):
+        """Keys on this datum whose region overlaps ``region``."""
+        shapes = self._shapes[data_id]
+        if len(shapes) <= 1:
+            # uniform grid -> overlap iff exact match
+            yield (data_id, region)
+            return
+        for other in self._regions[data_id]:
+            if other.overlaps(region):
+                yield (data_id, other)
+
+    def add(self, task: GTask) -> None:
+        """Register ``task``'s accesses; creates edges from earlier tasks."""
+        self.tasks[task.id] = task
+        for view, mode in task.accesses():
+            data_id = view.data.id
+            region = view.region
+            self._shapes[data_id].add(region.shape)
+            for key in list(self._conflicting_keys(data_id, region)):
+                lw = self._last_writer.get(key)
+                if mode.writes:
+                    # WAW + WAR: after last writer and all readers since
+                    if lw is not None:
+                        self._add_edge(lw, task)
+                    for r in self._readers.get(key, ()):
+                        self._add_edge(r, task)
+                else:
+                    # RAW: after last writer
+                    if lw is not None:
+                        self._add_edge(lw, task)
+            key = (data_id, region)
+            if region not in self._regions[data_id]:
+                self._regions[data_id].append(region)
+            if mode.writes:
+                self._last_writer[key] = task
+                self._readers[key] = []
+            else:
+                self._readers[key].append(task)
+
+    # -- scheduling ----------------------------------------------------------
+    def waves(self) -> List[List[GTask]]:
+        """Kahn level schedule: wave k = tasks whose preds are all in waves <k."""
+        indeg = {tid: len(self.preds.get(tid, ())) for tid in self.tasks}
+        frontier = sorted(tid for tid, d in indeg.items() if d == 0)
+        out: List[List[GTask]] = []
+        done = 0
+        while frontier:
+            out.append([self.tasks[tid] for tid in frontier])
+            done += len(frontier)
+            nxt: List[int] = []
+            for tid in frontier:
+                for succ in self.edges.get(tid, ()):
+                    indeg[succ] -= 1
+                    if indeg[succ] == 0:
+                        nxt.append(succ)
+            frontier = sorted(nxt)
+        if done != len(self.tasks):  # pragma: no cover - cycle = bug
+            raise RuntimeError("cycle in task DAG (versioning bug)")
+        return out
+
+    def sequential_order(self) -> List[GTask]:
+        """Program (submission) order — the reference semantics."""
+        return [self.tasks[tid] for tid in sorted(self.tasks)]

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLMDataset, sharded_batches
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "sharded_batches"]

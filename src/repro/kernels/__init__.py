@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (compute hot spots) with jnp oracles in ``ref``."""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,144 @@
+"""Causal GQA flash attention as a Pallas TPU kernel (prefill hot spot).
+
+Canonical TPU formulation: grid ``(B, Hq, nq, nk)`` with the KV dimension
+innermost; a VMEM fp32 accumulator plus running max/denominator implement
+the online softmax across KV block revisits.  Causal and sliding-window
+masks prune whole KV blocks with ``pl.when`` (no MXU work for fully masked
+blocks) and mask partially-covered blocks element-wise.
+
+GQA is native: the KV ``BlockSpec`` index map sends query head ``h`` to KV
+head ``h // (Hq // Hkv)`` — no ``jnp.repeat`` materialization.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .tile_linalg import _resolve
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    bq: int,
+    bk: int,
+    nk: int,
+):
+    ki = pl.program_id(3)
+    q_start = pl.program_id(2) * bq
+    k_start = ki * bk
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # prune KV blocks with no unmasked element for this Q block
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_start <= q_start + bq - 1
+    if window > 0:
+        needed &= k_start + bk - 1 > q_start - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[...][0, 0].astype(jnp.float32) * scale  # (bq, D)
+        k = k_ref[...][0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[...][0, 0].astype(jnp.float32)  # (bk, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+        qpos = q_start + jnp.arange(bq)[:, None]
+        kpos = k_start + jnp.arange(bk)[None, :]
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...][:, 0]
+        l_prev = l_ref[...][:, 0]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_cur), 0.0, m_cur)
+        p = jnp.exp(s - m_safe[:, None])  # fully-masked rows -> exp(-inf)=0
+        alpha = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+        l_cur = alpha * l_prev + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur[:, None]
+        l_ref[...] = l_cur[:, None]
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        o = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)[:, None]
+        o_ref[...] = o[None, None].astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nk = S // bk
+    scale = (D ** -0.5) if scale is None else scale
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        nk=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, S // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=_resolve(interpret),
+    )(q, k, v)

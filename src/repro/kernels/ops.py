@@ -1,0 +1,59 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Single-tile convenience entry points (used by the inline executor and unit
+tests) plus the batched entry points the wave executors launch directly.
+``interpret`` resolves automatically: compiled on TPU, interpreter on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import tile_linalg
+from .flash_attention import flash_attention
+from .tile_linalg import (
+    batched_gemm,
+    batched_potrf,
+    batched_syrk,
+    batched_trsm,
+    default_interpret,
+    matmul,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def potrf(a: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    return batched_potrf(a[None], interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trsm(l: jnp.ndarray, b: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    return batched_trsm(l[None], b[None], interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def syrk(a: jnp.ndarray, c: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    return batched_syrk(a[None], c[None], interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gemm(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    return batched_gemm(a[None], b[None], c[None], interpret=interpret)[0]
+
+
+__all__ = [
+    "batched_gemm",
+    "batched_potrf",
+    "batched_syrk",
+    "batched_trsm",
+    "default_interpret",
+    "flash_attention",
+    "gemm",
+    "matmul",
+    "potrf",
+    "syrk",
+    "trsm",
+]

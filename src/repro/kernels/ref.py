@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+Conventions match the blocked left-looking Cholesky (paper Fig. 2b):
+    potrf(a)      -> lower Cholesky factor L of a
+    trsm(l, b)    -> b @ inv(l)^T         (right, lower, transposed)
+    syrk(a, c)    -> c - a @ a^T
+    gemm(a, b, c) -> c - a @ b^T
+All oracles compute in float32 and cast back to the input dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def potrf(a: jnp.ndarray) -> jnp.ndarray:
+    return jnp.linalg.cholesky(_f32(a)).astype(a.dtype)
+
+
+def trsm(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    x = solve_triangular(_f32(l), _f32(b).T, lower=True)
+    return x.T.astype(b.dtype)
+
+
+def syrk(a: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    return (_f32(c) - _f32(a) @ _f32(a).T).astype(c.dtype)
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    return (_f32(c) - _f32(a) @ _f32(b).T).astype(c.dtype)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return (_f32(a) @ _f32(b)).astype(a.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    causal: bool = True,
+    window: int = 0,  # 0 = global; >0 = local sliding window
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference attention with GQA head-group broadcasting."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    kq = jnp.repeat(_f32(k), g, axis=1)
+    vq = jnp.repeat(_f32(v), g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", _f32(q) * scale, kq)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq).astype(q.dtype)

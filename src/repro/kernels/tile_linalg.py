@@ -1,0 +1,197 @@
+"""Pallas TPU tile kernels for blocked dense linear algebra.
+
+These are the leaves of the UTP task hierarchy (the paper's cuBLAS wrapper
+analog).  Every kernel is *batched*: it takes a stack of tiles ``(n, b, b)``
+and maps the batch over the Pallas grid, so a whole wave of independent
+same-shaped tasks becomes ONE kernel launch (DESIGN.md §2: wave batching).
+
+TPU adaptation notes:
+  - tiles live in VMEM via explicit ``BlockSpec``s; ``b`` should be a
+    multiple of 128 so the MXU sees aligned matmuls (tests sweep smaller
+    shapes in interpret mode where alignment is not enforced);
+  - POTRF/TRSM are column-recurrences (O(b) steps of rank-1/matvec work on
+    the VPU); they are only ever applied to the O(p) diagonal/panel tiles
+    while the O(p^3) trailing updates (SYRK/GEMM) are single MXU matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _resolve(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else interpret
+
+
+def _tile_spec(b: int):
+    return pl.BlockSpec((1, b, b), lambda i: (i, 0, 0))
+
+
+# --------------------------------------------------------------------------
+# POTRF: batched lower Cholesky of (n, b, b) tiles
+# --------------------------------------------------------------------------
+def _potrf_kernel(a_ref, l_ref):
+    a = a_ref[...][0].astype(jnp.float32)
+    b = a.shape[-1]
+    idx = jnp.arange(b)
+
+    def body(j, L):
+        # s[i] = sum_{k<j} L[i,k] * L[j,k]  (columns >= j of L are still zero)
+        s = L @ L[j]
+        djj = jnp.sqrt(a[j, j] - s[j])
+        col = (a[:, j] - s) / djj
+        col = jnp.where(idx > j, col, 0.0)
+        col = col.at[j].set(djj)
+        return L.at[:, j].set(col)
+
+    L = lax.fori_loop(0, b, body, jnp.zeros_like(a))
+    l_ref[...] = L[None].astype(l_ref.dtype)
+
+
+def batched_potrf(a: jnp.ndarray, *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    n, b, _ = a.shape
+    return pl.pallas_call(
+        _potrf_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(b)],
+        out_specs=_tile_spec(b),
+        out_shape=jax.ShapeDtypeStruct((n, b, b), a.dtype),
+        interpret=_resolve(interpret),
+    )(a)
+
+
+# --------------------------------------------------------------------------
+# TRSM: batched X = B @ inv(L)^T  (right, lower-triangular, transposed)
+# --------------------------------------------------------------------------
+def _trsm_kernel(l_ref, b_ref, x_ref):
+    L = l_ref[...][0].astype(jnp.float32)
+    B = b_ref[...][0].astype(jnp.float32)
+    nb = L.shape[-1]
+
+    def body(j, X):
+        # (X L^T)[:, j] = sum_{k<=j} X[:,k] L[j,k]; cols >= j of X still zero
+        s = X @ L[j]
+        col = (B[:, j] - s) / L[j, j]
+        return X.at[:, j].set(col)
+
+    X = lax.fori_loop(0, nb, body, jnp.zeros_like(B))
+    x_ref[...] = X[None].astype(x_ref.dtype)
+
+
+def batched_trsm(
+    l: jnp.ndarray, b: jnp.ndarray, *, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    n, nb, _ = l.shape
+    return pl.pallas_call(
+        _trsm_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(nb), _tile_spec(nb)],
+        out_specs=_tile_spec(nb),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=_resolve(interpret),
+    )(l, b)
+
+
+# --------------------------------------------------------------------------
+# SYRK: batched C - A @ A^T   /   GEMM: batched C - A @ B^T  (MXU matmuls)
+# --------------------------------------------------------------------------
+def _syrk_kernel(a_ref, c_ref, o_ref):
+    a = a_ref[...][0]
+    c = c_ref[...][0].astype(jnp.float32)
+    upd = c - jnp.dot(a, a.T, preferred_element_type=jnp.float32)
+    o_ref[...] = upd[None].astype(o_ref.dtype)
+
+
+def batched_syrk(
+    a: jnp.ndarray, c: jnp.ndarray, *, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    n, b, _ = a.shape
+    return pl.pallas_call(
+        _syrk_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(b), _tile_spec(b)],
+        out_specs=_tile_spec(b),
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=_resolve(interpret),
+    )(a, c)
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref):
+    a = a_ref[...][0]
+    b = b_ref[...][0]
+    c = c_ref[...][0].astype(jnp.float32)
+    upd = c - jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    o_ref[...] = upd[None].astype(o_ref.dtype)
+
+
+def batched_gemm(
+    a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, *, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    n, nb, _ = a.shape
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(nb), _tile_spec(nb), _tile_spec(nb)],
+        out_specs=_tile_spec(nb),
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=_resolve(interpret),
+    )(a, b, c)
+
+
+# --------------------------------------------------------------------------
+# General tiled matmul with K-revisiting and a VMEM fp32 accumulator —
+# the canonical MXU pattern (used standalone and by benchmarks).
+# --------------------------------------------------------------------------
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, bm, bn, bk)
+    nk = k // bk
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=_resolve(interpret),
+    )(a, b)

@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, sharding resolver, step builders, dry-run."""

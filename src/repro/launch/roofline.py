@@ -1,0 +1,236 @@
+"""Three-term roofline from the compiled dry-run artifact (assignment
+§ROOFLINE ANALYSIS).
+
+    compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes / (chips * HBM_BW)
+    collective term = collective_bytes_per_chip / ICI_BW
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (already per-
+partition under SPMD); collective bytes parsed from the post-SPMD HLO text
+(shapes there are per-device).  Ring-collective convention: an all-gather
+moves ~result_bytes per chip, an all-reduce ~2x operand bytes, a
+reduce-scatter ~operand bytes, all-to-all/permute ~operand bytes; the
+(n-1)/n factor is folded to 1.
+
+MODEL_FLOPS (useful compute) comes from the exact parameter template:
+6*N_active*tokens for training, 2*N_active*tokens for inference, plus the
+sequence-mixing term per family (causal-aware).  The ratio
+MODEL_FLOPS/HLO_FLOPs exposes remat/recompute/full-causal waste.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+# ---- TPU v5e hardware constants (assignment-provided) ---------------------
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link (conservative single-link figure)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# result-type chunks like  bf16[8,128,2048]{2,1,0}  or  f32[] .
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(?P<res>[^=]*?)\s*(?P<op>"
+    + "|".join(_COLLECTIVES)
+    + r")(?P<start>-start)?\s*\("
+)
+
+
+def _bytes_of_result(res: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(res):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind {count, bytes} from post-SPMD HLO (per-device shapes)."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES
+    }
+    for m in _LINE_RE.finditer(hlo_text):
+        op = m.group("op")
+        b = _bytes_of_result(m.group("res"))
+        if op == "all-reduce":
+            b *= 2  # ring: reduce-scatter + all-gather phases
+        out[op]["count"] += 1
+        out[op]["bytes"] += b
+    return out
+
+
+def collective_bytes(coll: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["bytes"] for v in coll.values())
+
+
+# --------------------------------------------------------------------------
+# analytic useful-FLOPs model (exact N from the template)
+# --------------------------------------------------------------------------
+def seq_mix_flops(cfg: ArchConfig, batch: int, seq: int, kind: str) -> float:
+    """Sequence-mixing FLOPs beyond the 6N/2N weight term (causal-aware)."""
+    B, S = batch, seq
+
+    def attn(n_layers: int, cache_len: Optional[int] = None) -> float:
+        H, hd = cfg.n_heads, cfg.hd
+        if kind == "decode":
+            L = cache_len if cache_len is not None else S
+            return 4.0 * B * L * H * hd * n_layers  # q.K + p.V, one token
+        # train/prefill: causal = half the full square
+        f = 2.0 * B * S * S * H * hd * n_layers
+        return f * (3.0 if kind == "train" else 1.0)  # bwd ~ 2x fwd
+
+    if cfg.family == "rwkv":
+        D = cfg.d_model
+        H = D // cfg.rwkv_head_size
+        K = cfg.rwkv_head_size
+        Q = cfg.rwkv_chunk
+        T = B * (1 if kind == "decode" else S)
+        f = 2.0 * T * H * K * (2 * K + 2 * Q) * cfg.n_layers
+        return f * (3.0 if kind == "train" else 1.0)
+    if cfg.family == "hybrid":
+        D = cfg.d_model
+        H, P, N, Q = cfg.ssm_heads, (cfg.ssm_expand * cfg.d_model) // cfg.ssm_heads, cfg.ssm_state, cfg.ssm_chunk
+        T = B * (1 if kind == "decode" else S)
+        ssd = 2.0 * T * H * (2 * N * P + Q * (N + P)) * cfg.n_layers
+        ssd *= 3.0 if kind == "train" else 1.0
+        n_shared = cfg.n_layers // max(cfg.hybrid_attn_every, 1)
+        return ssd + attn(n_shared, cache_len=S)
+    if cfg.local_per_global > 0:
+        g = cfg.local_per_global + 1
+        n_glob = cfg.n_layers // g
+        n_loc = cfg.n_layers - n_glob
+        W = cfg.local_window
+        H, hd = cfg.n_heads, cfg.hd
+        if kind == "decode":
+            loc = 4.0 * B * min(W, S) * H * hd * n_loc
+        else:
+            loc = 4.0 * B * S * min(W, S) * H * hd * n_loc * (
+                3.0 if kind == "train" else 1.0
+            )
+        return attn(n_glob, cache_len=S) + loc
+    return attn(cfg.n_layers, cache_len=S)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    from ..models.model import param_counts
+
+    c = param_counts(cfg)
+    N = c["active_nonembed"]
+    if shape.kind == "train":
+        T = shape.global_batch * shape.seq_len
+        return 6.0 * N * T + seq_mix_flops(cfg, shape.global_batch, shape.seq_len, "train")
+    if shape.kind == "prefill":
+        T = shape.global_batch * shape.seq_len
+        return 2.0 * N * T + seq_mix_flops(cfg, shape.global_batch, shape.seq_len, "prefill")
+    # decode: one token per sequence against a cache of seq_len
+    T = shape.global_batch
+    return 2.0 * N * T + seq_mix_flops(cfg, shape.global_batch, shape.seq_len, "decode")
+
+
+# --------------------------------------------------------------------------
+# report
+# --------------------------------------------------------------------------
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per chip (cost_analysis is per-partition)
+    hlo_bytes: float
+    coll_bytes: float
+    collectives: Dict[str, Dict[str, float]]
+    model_flops_total: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0  # MODEL_FLOPS / (chips * HLO_FLOPs)
+    mfu_bound: float = 0.0  # MODEL_FLOPS / (chips * PEAK * max term)
+    memory_per_chip: Optional[float] = None
+    notes: str = ""
+    # raw XLA cost_analysis (loop bodies counted once — reference only)
+    xla_cost_flops: float = 0.0
+    xla_cost_bytes: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        denom = self.chips * self.hlo_flops
+        self.useful_ratio = self.model_flops_total / denom if denom else 0.0
+        t = max(self.compute_s, self.memory_s, self.collective_s)
+        self.mfu_bound = (
+            self.model_flops_total / (self.chips * PEAK_FLOPS * t) if t else 0.0
+        )
+        return self
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, Any],
+    hlo_text: str,
+    memory_stats: Optional[Dict[str, float]] = None,
+    notes: str = "",
+) -> Roofline:
+    """Three-term roofline from the compiled HLO (loop-aware; see hlo_cost)."""
+    from .hlo_cost import analyze_hlo
+
+    hc = analyze_hlo(hlo_text)
+    if hc.notes:
+        notes = (notes + "; " + hc.notes).strip("; ")
+    r = Roofline(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=hc.flops,
+        hlo_bytes=hc.traffic,
+        coll_bytes=hc.coll_bytes,
+        collectives=hc.coll_dict(),
+        model_flops_total=model_flops(cfg, shape),
+        memory_per_chip=(memory_stats or {}).get("total"),
+        notes=notes,
+    )
+    r.xla_cost_flops = float(cost.get("flops", 0.0))
+    r.xla_cost_bytes = float(cost.get("bytes accessed", 0.0))
+    return r.finalize()

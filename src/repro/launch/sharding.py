@@ -1,0 +1,170 @@
+"""Logical-axis -> mesh-axis sharding resolver (divisibility-safe).
+
+Every parameter/cache leaf carries *logical* axis names (PSpec.logical /
+cache_logical).  A ``Rules`` table maps each logical name to an ordered
+tuple of candidate mesh axes; the resolver walks a leaf's dims in order and
+assigns each candidate axis iff (a) it exists in the mesh, (b) it is not
+already used by an earlier dim of the same leaf, and (c) the dim is
+divisible by the axis size.  Anything else falls back to replication —
+placement NEVER fails, it only degrades (e.g. kv_heads=8 on a 16-way model
+axis stays replicated while q heads shard).
+
+Standard parallelism expressed through the tables:
+  TP    heads/mlp/experts/vocab -> "model"
+  FSDP  embed (d_model) dim of matrices -> "data" (+"pod" for >=100B)
+  DP    batch -> ("pod", "data")
+  SP    cache seq -> leftover axes (long-context: ("pod","data","model"))
+  EP    experts -> "model" (the MoE shard_map path reads the same table)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+Axes = Tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class Rules:
+    table: Dict[Optional[str], Axes]
+    # leaves with fewer dims than this stay replicated (norm vectors etc.)
+    min_ndim: int = 2
+
+    def lookup(self, name: Optional[str]) -> Axes:
+        return self.table.get(name, ())
+
+
+def train_rules(cfg: ArchConfig, big_model_fsdp_pod: bool = True) -> Rules:
+    fsdp: Axes = ()
+    if cfg.fsdp:
+        # >=100B params need the pod axis in the FSDP group to fit HBM
+        big = param_bytes_estimate(cfg) > 100e9 * 4
+        fsdp = ("pod", "data") if (big and big_model_fsdp_pod) else ("data",)
+    return Rules(
+        table={
+            "vocab": ("model",),
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "mlp": ("model",),
+            "experts": ("model",),
+            "embed": fsdp,
+            "batch": ("pod", "data"),
+            "seq": (),
+            "head_dim": (),
+            "layers": (),
+            "state": (),
+            None: (),
+        }
+    )
+
+
+def serve_rules(cfg: ArchConfig) -> Rules:
+    """Decode/prefill: same weight layout; cache seq takes leftover axes."""
+    base = train_rules(cfg)
+    t = dict(base.table)
+    t["batch"] = ("pod", "data")
+    t["seq"] = ("pod", "data", "model")  # long-context cache sharding
+    return Rules(table=t)
+
+
+def param_bytes_estimate(cfg: ArchConfig) -> int:
+    from ..models.model import param_counts
+
+    return param_counts(cfg)["total"] * jax.dtypes.canonicalize_dtype(
+        cfg.param_dtype
+    ).itemsize
+
+
+# --------------------------------------------------------------------------
+# resolution
+# --------------------------------------------------------------------------
+def resolve_pspec(
+    logical: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Rules,
+) -> P:
+    if len(shape) < rules.min_ndim:
+        return P()
+    used = set()
+    spec = []
+    for dim, name in zip(shape, logical):
+        chosen = []
+        rem = dim
+        for ax in rules.lookup(name):
+            if ax in mesh.axis_names and ax not in used:
+                sz = mesh.shape[ax]
+                if rem % sz == 0 and rem >= sz:
+                    chosen.append(ax)
+                    used.add(ax)
+                    rem //= sz
+        spec.append(tuple(chosen) if len(chosen) > 1 else (chosen[0] if chosen else None))
+    return P(*spec)
+
+
+def _shape_of(leaf) -> Tuple[int, ...]:
+    return tuple(leaf.shape)
+
+
+def tree_pspecs(logical_tree: Any, shaped_tree: Any, mesh: Mesh, rules: Rules):
+    """Map (logical, shaped) trees -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda lg, leaf: resolve_pspec(tuple(lg), _shape_of(leaf), mesh, rules),
+        logical_tree,
+        shaped_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def tree_shardings(logical_tree: Any, shaped_tree: Any, mesh: Mesh, rules: Rules):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_pspecs(logical_tree, shaped_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_pspec(mesh: Mesh, rules: Rules, ndim: int) -> P:
+    """(B, S, ...) activations: batch dim over the DP axes."""
+    axes = tuple(a for a in rules.lookup("batch") if a in mesh.axis_names)
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def batch_sharding(mesh: Mesh, rules: Rules, batch_size: int, ndim: int):
+    axes = tuple(a for a in rules.lookup("batch") if a in mesh.axis_names)
+    sz = 1
+    for a in axes:
+        sz *= mesh.shape[a]
+    if sz and batch_size % sz != 0:
+        # drop axes from the right until divisible (e.g. batch=1 long-context)
+        while axes and batch_size % _prod(mesh, axes) != 0:
+            axes = axes[:-1]
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return NamedSharding(mesh, P(lead, *([None] * (ndim - 1))))
+
+
+def _prod(mesh: Mesh, axes: Axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def data_parallel_degree(mesh: Mesh, rules: Rules, batch_size: int) -> int:
+    axes = tuple(a for a in rules.lookup("batch") if a in mesh.axis_names)
+    while axes and batch_size % _prod(mesh, axes) != 0:
+        axes = axes[:-1]
+    return _prod(mesh, axes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

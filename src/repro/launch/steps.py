@@ -1,0 +1,330 @@
+"""Step builders: jit-able train/prefill/decode steps with full shardings.
+
+Each builder returns a ``StepPlan``: the pure function, ShapeDtypeStruct
+argument trees (dry-run: no allocation) and the matching NamedSharding
+trees for ``jax.jit(fn, in_shardings=..., out_shardings=...)``.  The same
+plan drives the real trainer/server (with materialized arrays) and the
+multi-pod dry-run (with abstract inputs) — one source of truth.
+
+The UTP connection (paper §2.1): a step IS the root task of a task tree —
+``TrainStepOp.split() -> [microbatch fwd/bwd]* -> grad-reduce -> optimizer
+update``.  On TPU the dispatcher's optimal plan is maximal fusion, so the
+tree lowers to the single jit program built here; the ``train/step_ops.py``
+module exposes the same step through the explicit UTP task interface.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import optim
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.model import Model, build_model
+from ..models.moe import MoeCtx
+from ..models.transformer import cache_logical, cache_specs
+from . import sharding as sh
+
+
+@dataclass
+class StepPlan:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStruct trees (positional)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    static_meta: Optional[Dict[str, Any]] = None
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+# --------------------------------------------------------------------------
+# batch specs
+# --------------------------------------------------------------------------
+def batch_specs(
+    cfg: ArchConfig,
+    batch: int,
+    seq: int,
+    mesh: Mesh,
+    rules: sh.Rules,
+    with_labels: bool,
+):
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    shards: Dict[str, NamedSharding] = {}
+    if cfg.frontend:
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.d_model), cfg.compute_dtype
+        )
+        shards["embeds"] = sh.batch_sharding(mesh, rules, batch, 3)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        shards["tokens"] = sh.batch_sharding(mesh, rules, batch, 2)
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        shards["labels"] = sh.batch_sharding(mesh, rules, batch, 2)
+    return specs, shards
+
+
+def _group_param_constraint(cfg: ArchConfig, mesh: Mesh, rules: sh.Rules):
+    """Pin a scanned group's param slices to their stored sharding.
+
+    The slice drops the leading 'layers' dim from the stacked templates, so
+    resolve each leaf's spec from its remaining logical axes.  Anchoring
+    the forward slices makes Shardy produce already-sharded weight-grad
+    cotangents (reduce-scatter per group instead of fp32 all-reduce)."""
+    from ..models.model import model_template
+    from ..models.layers import PSpec, logical_tree
+    from ..models.transformer import group_template
+
+    t = group_template(cfg)
+    logical = logical_tree(t)
+    shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        t, is_leaf=lambda x: isinstance(x, PSpec),
+    )
+    specs = sh.tree_pspecs(logical, shapes, mesh, rules)
+
+    def constrain(p_g):
+        return jax.tree.map(
+            lambda x, spec: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec)
+            ),
+            p_g,
+            specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    return constrain
+
+
+def moe_ctx_for(cfg: ArchConfig, mesh: Mesh, rules: sh.Rules) -> Optional[MoeCtx]:
+    """Parallel context — needed by every arch (activation anchoring), and
+    by MoE archs additionally for the shard_map EP dispatch."""
+    if mesh is None:
+        return None
+    return MoeCtx(
+        mesh=mesh,
+        batch_axes=tuple(a for a in rules.lookup("batch") if a in mesh.axis_names),
+        model_axis="model" if "model" in mesh.axis_names else None,
+        fsdp_axes=tuple(a for a in rules.lookup("embed") if a in mesh.axis_names),
+        seq_axis=(
+            "model"
+            if cfg.seq_parallel and "model" in mesh.axis_names
+            else None
+        ),
+        group_param_constraint=(
+            _group_param_constraint(cfg, mesh, rules) if cfg.anchor_params else None
+        ),
+    )
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+def make_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    opt_cfg: Optional[optim.AdamWConfig] = None,
+    rules: Optional[sh.Rules] = None,
+) -> StepPlan:
+    model = build_model(cfg)
+    rules = rules or sh.train_rules(cfg)
+    opt_cfg = opt_cfg or optim.AdamWConfig(state_dtype=cfg.optim_state_dtype)
+    mctx = moe_ctx_for(cfg, mesh, rules)
+    m = cfg.microbatches
+
+    # p_shard is needed by loss_of's anchored cast; resolve it up front
+    p_specs_early = model.abstract()
+    p_shard_early = sh.tree_shardings(model.logical, p_specs_early, mesh, rules)
+
+    def loss_of(params, batch):
+        from ..models.model import cast_for_forward
+
+        if cfg.cast_params and cfg.anchor_cast:
+            # cast to compute dtype AND pin the bf16 copy to the stored
+            # sharding, so FSDP all-gathers move bf16 (the partitioner
+            # otherwise may commute to gather-f32-then-convert)
+            casted = cast_for_forward(cfg, params)
+            params = jax.tree.map(
+                lambda p, s: jax.lax.with_sharding_constraint(p, s),
+                casted, p_shard_early,
+            )
+        return model.loss(params, batch, moe_ctx=mctx)
+
+    def train_step(params, opt_state, batch):
+        if m > 1:
+            def micro(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, mb
+                )
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, loss_acc + loss), metrics
+
+            mb = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch
+            )
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), metrics_seq = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda g: g / m, grads)
+            metrics = jax.tree.map(lambda x: x.mean(), metrics_seq)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+        new_params, new_opt, om = optim.update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, {**metrics, **om}
+
+    # specs + shardings
+    p_specs = model.abstract()
+    p_shard = sh.tree_shardings(model.logical, p_specs, mesh, rules)
+    o_specs = {
+        "m": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype), p_specs
+        ),
+        "v": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype), p_specs
+        ),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    o_shard = {
+        "m": p_shard,
+        "v": p_shard,
+        "count": sh.replicated(mesh),
+    }
+    b_specs, b_shard = batch_specs(
+        cfg, shape.global_batch, shape.seq_len, mesh, rules, with_labels=True
+    )
+    metrics_shard = None  # let jit infer (all replicated scalars)
+    return StepPlan(
+        name="train_step",
+        fn=train_step,
+        args=(p_specs, o_specs, b_specs),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metrics_shard),
+        donate_argnums=(0, 1),
+        static_meta={"kind": "train"},
+    )
+
+
+# --------------------------------------------------------------------------
+# serve steps
+# --------------------------------------------------------------------------
+def _cache_trees(cfg: ArchConfig, batch: int, max_seq: int, mesh, rules):
+    c_specs = cache_specs(cfg, batch, max_seq)
+    c_logical = cache_logical(cfg)
+    c_shard = sh.tree_shardings(c_logical, c_specs, mesh, rules)
+    return c_specs, c_shard
+
+
+def _serve_param_specs(model: Model, cfg: ArchConfig):
+    """Serving stores weights in the compute dtype (bf16) — no fp32 masters
+    at inference.  Matches ``cast_for_forward``'s rule so the in-step cast
+    is a no-op: >=2D float leaves in compute dtype, the rest unchanged."""
+    import numpy as np
+
+    cd = cfg.compute_dtype
+
+    def spec(s: jax.ShapeDtypeStruct):
+        if np.issubdtype(s.dtype, np.floating) and len(s.shape) >= 2:
+            return jax.ShapeDtypeStruct(s.shape, cd)
+        return s
+
+    return jax.tree.map(spec, model.abstract())
+
+
+def make_prefill_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    rules: Optional[sh.Rules] = None,
+) -> StepPlan:
+    model = build_model(cfg)
+    rules = rules or sh.serve_rules(cfg)
+    mctx = moe_ctx_for(cfg, mesh, rules)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache, moe_ctx=mctx)
+
+    p_specs = _serve_param_specs(model, cfg)
+    p_shard = sh.tree_shardings(model.logical, p_specs, mesh, rules)
+    b_specs, b_shard = batch_specs(
+        cfg, shape.global_batch, shape.seq_len, mesh, rules, with_labels=False
+    )
+    c_specs, c_shard = _cache_trees(
+        cfg, shape.global_batch, shape.seq_len, mesh, rules
+    )
+    logits_shard = sh.batch_sharding(mesh, rules, shape.global_batch, 2)
+    return StepPlan(
+        name="prefill_step",
+        fn=prefill_step,
+        args=(p_specs, b_specs, c_specs),
+        in_shardings=(p_shard, b_shard, c_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(2,),
+        static_meta={"kind": "prefill"},
+    )
+
+
+def make_decode_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    rules: Optional[sh.Rules] = None,
+) -> StepPlan:
+    """One new token against a KV cache of ``shape.seq_len``."""
+    model = build_model(cfg)
+    rules = rules or sh.serve_rules(cfg)
+    mctx = moe_ctx_for(cfg, mesh, rules)
+
+    def decode_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos, moe_ctx=mctx)
+
+    p_specs = _serve_param_specs(model, cfg)
+    p_shard = sh.tree_shardings(model.logical, p_specs, mesh, rules)
+    b_specs, b_shard = batch_specs(
+        cfg, shape.global_batch, 1, mesh, rules, with_labels=False
+    )
+    c_specs, c_shard = _cache_trees(
+        cfg, shape.global_batch, shape.seq_len, mesh, rules
+    )
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    logits_shard = sh.batch_sharding(mesh, rules, shape.global_batch, 2)
+    return StepPlan(
+        name="decode_step",
+        fn=decode_step,
+        args=(p_specs, c_specs, b_specs, pos_spec),
+        in_shardings=(p_shard, c_shard, b_shard, sh.replicated(mesh)),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+        static_meta={"kind": "decode"},
+    )
+
+
+def make_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig, **kw) -> StepPlan:
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape, **kw)
+    return make_decode_step(cfg, mesh, shape, **kw)

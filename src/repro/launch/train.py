@@ -1,0 +1,72 @@
+"""Production training entry point.
+
+On a real TPU fleet each host runs:
+
+    python -m repro.launch.train --arch qwen3-32b --shape train_4k \
+        --multi-pod --steps 10000 --ckpt-dir gs://...
+
+and `jax.distributed.initialize()` wires the hosts into the 256/512-chip
+mesh from launch/mesh.py.  On this CPU harness the same entry runs the
+reduced config on the local device mesh — the code path (StepPlan ->
+Trainer -> checkpoints) is identical to what the dry-run compiles.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from .. import optim
+from ..configs import get_arch, get_shape
+from ..configs.base import ShapeConfig
+from ..train import Trainer, TrainerConfig
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (16,16)/(2,16,16) mesh (needs the chips)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config + small shape (CPU harness)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() first")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_arch(args.arch)
+    shape = get_shape(args.shape)
+    if args.reduced or not args.production_mesh:
+        cfg = cfg.reduced()
+        shape = ShapeConfig("reduced_train", seq_len=128, global_batch=8,
+                            kind="train")
+        mesh = make_local_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    trainer = Trainer(
+        cfg, shape, mesh,
+        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir),
+        opt_cfg=optim.AdamWConfig(
+            lr=optim.warmup_cosine(3e-4, warmup=min(100, args.steps // 10 + 1),
+                                   total=args.steps),
+            state_dtype=cfg.optim_state_dtype,
+        ),
+    )
+    out = trainer.train()
+    print(f"finished at step {out['step']}; stragglers={out['stragglers']} "
+          f"failures={out['failures']}")
+
+
+if __name__ == "__main__":
+    main()

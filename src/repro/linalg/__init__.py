@@ -1,0 +1,4 @@
+from .cholesky import run_cholesky, utp_cholesky
+from .ops import GEMM, POTRF, SYRK, TRSM
+
+__all__ = ["GEMM", "POTRF", "SYRK", "TRSM", "run_cholesky", "utp_cholesky"]

@@ -1,0 +1,148 @@
+"""Blocked linear-algebra Operations (paper Fig. 2b) on the UTP core.
+
+Four operations closed under hierarchical splitting:
+
+    POTRF(A)       A -> L L^T (lower factor written back into A)
+    TRSM(L, B)     B <- B @ inv(L)^T
+    SYRK(A, C)     C <- C - A @ A^T
+    GEMM(A, B, C)  C <- C - A @ B^T
+
+``split`` reproduces the paper's left-looking blocked Cholesky expansion;
+every child is again one of these four, so the same code splits level-1
+blocks into level-2 tiles (the DuctTeip-over-SuperGlue hierarchy).
+``leaf_fn``/``batched_leaf_fn`` provide the jnp (cpuBLAS analog) and Pallas
+(cuBLAS analog) leaves through the unified operation interface.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from ..core.operation import Operation, OpRegistry
+from ..core.task import Access, GTask
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+
+
+class PotrfOp(Operation):
+    name = "potrf"
+
+    def default_modes(self, n):
+        return [Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda a: kops.potrf(a)
+        return kref.potrf
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_potrf
+        return jax.vmap(self.leaf_fn(backend))
+
+    def split(self, task: GTask, submit) -> None:
+        # Paper Fig. 2(b): left-looking blocked Cholesky on A's next level.
+        A = task.args[0]
+        n = A.row_part_num()
+        for i in range(n):
+            for j in range(i):
+                submit(GTask(SYRK, task, [A(i, j), A(i, i)]))
+                for k in range(i + 1, n):
+                    submit(GTask(GEMM, task, [A(k, j), A(i, j), A(k, i)]))
+            submit(GTask(POTRF, task, [A(i, i)]))
+            for j in range(i + 1, n):
+                submit(GTask(TRSM, task, [A(i, i), A(j, i)]))
+
+
+class TrsmOp(Operation):
+    name = "trsm"
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda l, b: kops.trsm(l, b)
+        return kref.trsm
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_trsm
+        return jax.vmap(self.leaf_fn(backend))
+
+    def split(self, task: GTask, submit) -> None:
+        # X L^T = B blocked: X(p,i) = (B(p,i) - sum_{k<i} X(p,k) L(i,k)^T) L(i,i)^-T
+        L, B = task.args
+        n = L.row_part_num()
+        m = B.row_part_num()
+        for i in range(n):
+            for p in range(m):
+                for k in range(i):
+                    submit(GTask(GEMM, task, [B(p, k), L(i, k), B(p, i)]))
+                submit(GTask(TRSM, task, [L(i, i), B(p, i)]))
+
+
+class SyrkOp(Operation):
+    name = "syrk"
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda a, c: kops.syrk(a, c)
+        return kref.syrk
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_syrk
+        return jax.vmap(self.leaf_fn(backend))
+
+    def split(self, task: GTask, submit) -> None:
+        # C -= A A^T blocked over C's grid; diagonal uses SYRK, rest GEMM.
+        A, C = task.args
+        n = C.row_part_num()
+        kk = A.col_part_num()
+        for i in range(n):
+            for j in range(n):
+                for k in range(kk):
+                    if i == j:
+                        submit(GTask(SYRK, task, [A(i, k), C(i, i)]))
+                    else:
+                        submit(GTask(GEMM, task, [A(i, k), A(j, k), C(i, j)]))
+
+
+class GemmOp(Operation):
+    name = "gemm"
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READ, Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda a, b, c: kops.gemm(a, b, c)
+        return kref.gemm
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_gemm
+        return jax.vmap(self.leaf_fn(backend))
+
+    def split(self, task: GTask, submit) -> None:
+        # C -= A B^T blocked
+        A, B, C = task.args
+        m = C.row_part_num()
+        n = C.col_part_num()
+        kk = A.col_part_num()
+        for i in range(m):
+            for j in range(n):
+                for k in range(kk):
+                    submit(GTask(GEMM, task, [A(i, k), B(j, k), C(i, j)]))
+
+
+POTRF = OpRegistry.register(PotrfOp())
+TRSM = OpRegistry.register(TrsmOp())
+SYRK = OpRegistry.register(SyrkOp())
+GEMM = OpRegistry.register(GemmOp())

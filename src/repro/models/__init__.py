@@ -1,0 +1,5 @@
+"""LM substrate: composable model definitions for the assigned archs."""
+
+from .model import Model, build_model, param_counts
+
+__all__ = ["Model", "build_model", "param_counts"]

@@ -1,0 +1,74 @@
+"""Modality frontends.
+
+Per the assignment, ``[audio]`` / ``[vlm]`` architectures specify the
+transformer BACKBONE only — the modality frontend is a STUB whose
+``input_specs()`` provides *precomputed* frame/patch embeddings.  This
+module defines that contract plus a deterministic synthetic embedder used
+by tests/examples so end-to-end drivers have something real to feed.
+
+  musicgen-large : EnCodec frame embeddings.  The real model sums four
+                   codebook embeddings per 50 Hz frame; the stub delivers
+                   the summed (B, S, d_model) frame embedding directly.
+  pixtral-12b    : Pixtral-ViT patch embeddings interleaved with text
+                   embeddings.  The stub delivers the fused (B, S, d_model)
+                   sequence directly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+def uses_stub_frontend(cfg: ArchConfig) -> bool:
+    return cfg.frontend in ("audio", "vision")
+
+
+def embed_input_shape(cfg: ArchConfig, batch: int, seq: int) -> Tuple[int, int, int]:
+    return (batch, seq, cfg.d_model)
+
+
+def synth_embeddings(
+    cfg: ArchConfig, rng: jax.Array, batch: int, seq: int
+) -> jnp.ndarray:
+    """Deterministic synthetic frame/patch embeddings (tests, examples)."""
+    x = jax.random.normal(rng, (batch, seq, cfg.d_model), jnp.float32)
+    return (x / jnp.sqrt(float(cfg.d_model))).astype(cfg.compute_dtype)
+
+
+def synth_frames_from_audio(
+    cfg: ArchConfig, audio: jnp.ndarray, frame: int = 320
+) -> jnp.ndarray:
+    """A stand-in 'EnCodec encoder': strided frame fold + fixed projection.
+
+    audio: (B, T) waveform -> (B, T//frame, d_model).  Deterministic, cheap,
+    and shaped like the real frontend so the serving example exercises the
+    full path.
+    """
+    B, T = audio.shape
+    S = T // frame
+    x = audio[:, : S * frame].reshape(B, S, frame)
+    k = jax.random.normal(jax.random.PRNGKey(0), (frame, cfg.d_model), jnp.float32)
+    return (x @ (k / jnp.sqrt(frame))).astype(cfg.compute_dtype)
+
+
+def synth_patches_from_image(
+    cfg: ArchConfig, images: jnp.ndarray, patch: int = 16
+) -> jnp.ndarray:
+    """A stand-in 'ViT stem': patchify + fixed projection.
+
+    images: (B, H, W, C) -> (B, (H//p)*(W//p), d_model).
+    """
+    B, H, W, C = images.shape
+    ph, pw = H // patch, W // patch
+    x = images[:, : ph * patch, : pw * patch]
+    x = x.reshape(B, ph, patch, pw, patch, C).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(B, ph * pw, patch * patch * C)
+    k = jax.random.normal(
+        jax.random.PRNGKey(1), (patch * patch * C, cfg.d_model), jnp.float32
+    )
+    return (x @ (k / jnp.sqrt(patch * patch * C))).astype(cfg.compute_dtype)

@@ -1,0 +1,180 @@
+"""Shared model building blocks + the parameter-template system.
+
+Every parameter is declared as a ``PSpec`` (shape, logical axes, init kind).
+The template tree drives three things with one source of truth:
+  - ``init_params``     — RNG initialization,
+  - ``logical_tree``    — logical-axis tree for the sharding resolver,
+  - ``param_counts``    — exact N for roofline MODEL_FLOPS.
+Logical axis names are mapped to mesh axes by ``launch/sharding.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def stack(spec: PSpec, n: int, axis_name: Optional[str] = None) -> PSpec:
+    """Add a leading stacked-layers dim (for lax.scan over layers)."""
+    return PSpec(
+        (n,) + spec.shape, (axis_name,) + spec.logical, spec.init, spec.scale
+    )
+
+
+def stack_tree(tree, n: int):
+    return jax.tree.map(
+        lambda s: stack(s, n), tree, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+
+
+def init_params(template, rng: jax.Array, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        template, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, r in zip(leaves, rngs):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        elif spec.init == "const":
+            out.append(jnp.full(spec.shape, spec.scale, dtype))
+        else:
+            if spec.init == "embed":
+                std = spec.scale
+            else:
+                fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+                std = spec.scale / (fan_in ** 0.5)
+            out.append(jax.random.normal(r, spec.shape, dtype) * std)
+    return treedef.unflatten(out)
+
+
+def abstract_params(template, dtype) -> Any:
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        template,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def logical_tree(template) -> Any:
+    return jax.tree.map(
+        lambda s: s.logical, template, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+
+
+def count_template(template) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, PSpec))
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+# --------------------------------------------------------------------------
+# norms / rope
+# --------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-6
+) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_template(cfg: ArchConfig, dim: Optional[int] = None) -> Dict[str, PSpec]:
+    """Pre-norm parameter template honouring ``cfg.norm_type``."""
+    d = cfg.d_model if dim is None else dim
+    t = {"scale": PSpec((d,), ("embed",), init="ones")}
+    if cfg.norm_type == "layernorm":
+        t["bias"] = PSpec((d,), ("embed",), init="zeros")
+    return t
+
+
+def norm_apply(cfg: ArchConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def sinusoidal_embed(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Classic transformer sin/cos position embedding. positions (B,S) -> (B,S,dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rope_embed(positions: jnp.ndarray, head_dim: int, theta: float):
+    """cos/sin tables for ``positions`` (any shape) -> (+ (hd/2,)) trailing."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) -> broadcast over heads."""
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+def mlp_template(cfg: ArchConfig) -> Dict[str, PSpec]:
+    D, F = cfg.d_model, cfg.d_ff
+    t = {"wo": PSpec((F, D), ("mlp", "embed"))}
+    t["wi"] = PSpec((D, F), ("embed", "mlp"))
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        t["wg"] = PSpec((D, F), ("embed", "mlp"))
+    return t
+
+
+def mlp_apply(cfg: ArchConfig, p, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif cfg.mlp_type == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif cfg.mlp_type == "relu2":  # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    elif cfg.mlp_type == "gelu":  # starcoder2/musicgen non-gated GELU
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(cfg.mlp_type)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))

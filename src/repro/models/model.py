@@ -1,0 +1,318 @@
+"""Top-level model: embed/frontend -> group-scanned stack -> norm -> head.
+
+``build_model(cfg)`` returns a ``Model`` namespace of *pure functions* so
+the launch layer can jit/pjit them with explicit shardings:
+
+    template()/init(rng)        parameter template / materialized params
+    forward(params, batch,...)  hidden states (+ cache, moe aux)
+    loss(params, batch)         scalar LM loss + metrics (chunked xent)
+    prefill(params, batch, cache)   fill the KV cache for a prompt
+    decode_step(params, cache, toks, pos)  one token with cache
+
+Batch convention: {"tokens": (B,S) int32} for token-input archs, or
+{"embeds": (B,S,D)} for stub-frontend archs ([audio]/[vlm]); training adds
+{"labels": (B,S) int32}.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .frontend import uses_stub_frontend
+from .layers import (
+    PSpec,
+    abstract_params,
+    count_template,
+    init_params,
+    logical_tree,
+    norm_apply,
+    norm_template,
+    sinusoidal_embed,
+)
+from .moe import MoeCtx
+from .transformer import (
+    cache_logical,
+    cache_specs,
+    group_layout,
+    init_cache,
+    n_groups,
+    stack_apply,
+    stack_template,
+)
+
+
+def model_template(cfg: ArchConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.vocab
+    t: Dict[str, Any] = {}
+    if not uses_stub_frontend(cfg):
+        t["embed"] = PSpec((V, D), ("vocab", "embed"), init="embed", scale=0.02)
+    t["stack"] = stack_template(cfg)
+    t["final_norm"] = norm_template(cfg)
+    if uses_stub_frontend(cfg) or not cfg.tie_embeddings:
+        t["lm_head"] = PSpec((D, V), ("embed", "vocab"))
+    return t
+
+
+def _head_weight(cfg: ArchConfig, params) -> jnp.ndarray:
+    if "lm_head" in params:
+        return params["lm_head"]  # (D, V)
+    return params["embed"].T  # tied
+
+
+def cast_for_forward(cfg: ArchConfig, params):
+    """Cast >=2D float params to the compute dtype ONCE at step entry.
+
+    The convert runs on the *sharded* leaves, so every downstream FSDP
+    all-gather moves bf16 instead of fp32 master weights — half the
+    gather bytes and HBM traffic (§Perf).  Router weights stay fp32
+    (routing-logit precision).  Backward flows through the convert, so
+    gradients accumulate into the fp32 masters unchanged.
+    """
+    if not cfg.cast_params:
+        return params
+    cd = cfg.compute_dtype
+
+    def cast(path, p):
+        keys = {getattr(k, "key", None) for k in path}
+        if "router" in keys:
+            return p
+        if cfg.cast_in_scan and "groups" in keys:
+            return p  # cast happens inside the scan body instead
+        if (
+            hasattr(p, "dtype")
+            and jnp.issubdtype(p.dtype, jnp.floating)
+            and p.ndim >= 2
+            and p.dtype != jnp.dtype(cd)
+        ):
+            return p.astype(cd)
+        return p
+
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+def embed_batch(cfg: ArchConfig, params, batch, positions) -> jnp.ndarray:
+    if "embeds" in batch:
+        h = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+            cfg.compute_dtype
+        )
+    if cfg.embed_scale:
+        h = h * jnp.asarray(jnp.sqrt(float(cfg.d_model)), h.dtype)
+    if cfg.pos_type == "sinusoidal":
+        h = h + sinusoidal_embed(positions, cfg.d_model).astype(h.dtype)
+    return h
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    positions: Optional[jnp.ndarray] = None,
+    cache=None,
+    cache_pos=None,
+    moe_ctx: Optional[MoeCtx] = None,
+):
+    """Returns (hidden (B,S,D), new_cache, moe_aux)."""
+    x0 = batch["embeds"] if "embeds" in batch else batch["tokens"]
+    B, S = x0.shape[0], x0.shape[1]
+    if positions is None:
+        base = 0 if cache_pos is None else cache_pos
+        positions = jnp.arange(S)[None, :] + jnp.reshape(base, (-1, 1))
+        positions = jnp.broadcast_to(positions, (B, S))
+    h = embed_batch(cfg, params, batch, positions)
+    if moe_ctx is not None:
+        h = moe_ctx.constrain_batch(h)
+    h, new_cache, aux = stack_apply(
+        cfg, params["stack"], h, positions, cache, cache_pos, moe_ctx
+    )
+    h = norm_apply(cfg, params["final_norm"], h)
+    if moe_ctx is not None:
+        h = moe_ctx.constrain_batch(h)
+    return h, new_cache, aux
+
+
+def lm_logits(cfg: ArchConfig, params, h: jnp.ndarray) -> jnp.ndarray:
+    w = _head_weight(cfg, params).astype(cfg.compute_dtype)
+    return jnp.einsum(
+        "...d,dv->...v", h, w, preferred_element_type=jnp.float32
+    )
+
+
+def chunked_xent(
+    cfg: ArchConfig, params, h: jnp.ndarray, labels: jnp.ndarray, moe_ctx=None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy without materializing (B,S,V) logits.
+
+    Scans sequence chunks; the chunk body is rematerialized so backward
+    recomputes each chunk's logits instead of storing them (the (B,S,V)
+    fp32 logits of a 256k-vocab model would otherwise dominate HBM).
+    Returns (mean loss, token accuracy).
+    """
+    B, S, D = h.shape
+    c = min(cfg.loss_chunk, S)
+    if S % c != 0:
+        c = S
+    nc = S // c
+    w = _head_weight(cfg, params).astype(cfg.compute_dtype)
+    hc = h.reshape(B, nc, c, D).swapaxes(0, 1)  # (nc, B, c, D)
+    yc = labels.reshape(B, nc, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_stats(hh, yy):
+        logits = jnp.einsum(
+            "bcd,dv->bcv", hh, w, preferred_element_type=jnp.float32
+        )
+        if moe_ctx is not None:
+            logits = moe_ctx.constrain_logits(logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yy[..., None], axis=-1)[..., 0]
+        acc = (jnp.argmax(logits, axis=-1) == yy).sum()
+        return (lse - gold).sum(), acc
+
+    def body(carry, xs):
+        tot, acc = carry
+        l, a = chunk_stats(*xs)
+        return (tot + l, acc + a), None
+
+    (tot, acc), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, yc)
+    )
+    n = B * S
+    return tot / n, acc.astype(jnp.float32) / n
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    moe_ctx: Optional[MoeCtx] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    params = cast_for_forward(cfg, params)
+    h, _, aux = forward(cfg, params, batch, moe_ctx=moe_ctx)
+    loss, acc = chunked_xent(cfg, params, h, batch["labels"], moe_ctx=moe_ctx)
+    metrics = {"xent": loss, "accuracy": acc}
+    if cfg.is_moe:
+        n_moe = sum(1 for d in group_layout(cfg) if d.moe) * n_groups(cfg)
+        aux = cfg.moe_aux_weight * aux / max(n_moe, 1)
+        metrics["moe_aux"] = aux
+        loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(
+    cfg: ArchConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    cache,
+    moe_ctx: Optional[MoeCtx] = None,
+):
+    """Run the prompt through the model filling ``cache`` from position 0.
+
+    Returns (last-token logits (B, V), new_cache).
+    """
+    params = cast_for_forward(cfg, params)
+    h, new_cache, _ = forward(
+        cfg, params, batch, cache=cache, cache_pos=jnp.zeros((), jnp.int32),
+        moe_ctx=moe_ctx,
+    )
+    return lm_logits(cfg, params, h[:, -1]), new_cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params,
+    cache,
+    batch: Dict[str, jnp.ndarray],  # tokens/embeds of shape (B, 1, ...)
+    pos: jnp.ndarray,  # scalar int32 position (uniform across batch)
+    moe_ctx: Optional[MoeCtx] = None,
+):
+    """One decode step. Returns (logits (B, V), new_cache)."""
+    params = cast_for_forward(cfg, params)
+    h, new_cache, _ = forward(
+        cfg, params, batch, cache=cache, cache_pos=pos, moe_ctx=moe_ctx
+    )
+    return lm_logits(cfg, params, h[:, -1]), new_cache
+
+
+# --------------------------------------------------------------------------
+# parameter accounting (exact, from the template — feeds roofline MODEL_FLOPS)
+# --------------------------------------------------------------------------
+def param_counts(cfg: ArchConfig) -> Dict[str, int]:
+    t = model_template(cfg)
+    total = count_template(t)
+    embed = 0
+    if "embed" in t:
+        embed += count_template(t["embed"])
+    expert_total = 0
+    expert_active = 0
+
+    def visit(spec: PSpec):
+        nonlocal expert_total, expert_active
+        if "experts" in spec.logical:
+            n = 1
+            for d in spec.shape:
+                n *= d
+            expert_total += n
+            expert_active += (n // cfg.n_experts) * cfg.top_k
+
+    jax.tree.map(visit, t, is_leaf=lambda x: isinstance(x, PSpec))
+    active = total - expert_total + expert_active
+    return {
+        "total": total,
+        "active": active,
+        "embed": embed,
+        "active_nonembed": active - embed,
+        "total_nonembed": total - embed,
+    }
+
+
+# --------------------------------------------------------------------------
+# build
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    template: Any
+    logical: Any
+
+    def init(self, rng: jax.Array):
+        return init_params(self.template, rng, self.cfg.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.template, self.cfg.param_dtype)
+
+    def forward(self, params, batch, **kw):
+        return forward(self.cfg, params, batch, **kw)
+
+    def loss(self, params, batch, moe_ctx=None):
+        return loss_fn(self.cfg, params, batch, moe_ctx=moe_ctx)
+
+    def prefill(self, params, batch, cache, moe_ctx=None):
+        return prefill(self.cfg, params, batch, cache, moe_ctx=moe_ctx)
+
+    def decode_step(self, params, cache, batch, pos, moe_ctx=None):
+        return decode_step(self.cfg, params, cache, batch, pos, moe_ctx=moe_ctx)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return init_cache(self.cfg, batch, max_seq)
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return cache_specs(self.cfg, batch, max_seq)
+
+    def cache_logical(self):
+        return cache_logical(self.cfg)
+
+    def param_counts(self):
+        return param_counts(self.cfg)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    t = model_template(cfg)
+    return Model(cfg=cfg, template=t, logical=logical_tree(t))

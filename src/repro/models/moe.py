@@ -1,0 +1,353 @@
+"""Mixture-of-Experts layer: top-k router + three dispatch strategies.
+
+``ep``     (distributed): explicit expert parallelism under ``shard_map`` —
+           tokens stay on their data shard, experts are sharded over the
+           'model' mesh axis; every model shard builds the capacity buffer
+           for *its* experts only and the combine is one ``psum`` over the
+           model axis (the classic GShard dataflow, TPU-native: the psum is
+           the same all-reduce a TP MLP already pays).  FSDP'd expert
+           weights are all-gathered over the data axes inside the body
+           (autodiff turns that into reduce-scatter for grads = ZeRO).
+``gather`` (single-device default): capacity-bounded scatter/gather
+           permutation — O(T·k·D) data movement, linear in tokens.
+``dense``  : Mesh-TF style one-hot dispatch einsums — O(T·E·C) FLOPs, kept
+           as the naive baseline the roofline analysis iterates against.
+
+Router uses fp32 logits, softmax-after-top-k (Switch convention), and an
+auxiliary load-balancing loss (returned, weighted by the caller).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import PSpec
+
+
+@dataclass(frozen=True)
+class MoeCtx:
+    """Parallel context: EP dispatch config + activation-sharding anchors.
+
+    ``batch_axes``: mesh axes the token batch dim is sharded over.
+    ``model_axis``: mesh axis experts/heads/d_ff are sharded over (TP axis).
+    ``fsdp_axes``:  mesh axes weight d_model dims are sharded over.
+
+    ``constrain_batch`` pins activations to the data-parallel layout
+    (batch over batch_axes, everything else replicated).  Without these
+    anchors the SPMD partitioner, seeing FSDP-sharded weights, is free to
+    all-gather the batch and shard activations on d_model instead — a
+    catastrophically collective-bound layout (observed in the qwen3
+    baseline dry-run before anchoring).
+    """
+
+    mesh: Any
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"
+    fsdp_axes: Tuple[str, ...] = ()
+    # Megatron-style sequence parallelism: shard the residual stream's
+    # sequence dim over this axis between blocks; the partitioner then
+    # lowers TP boundary all-reduces into reduce-scatter + all-gather pairs
+    # (half the bytes) and norms/elementwise run on S/tp shards.
+    seq_axis: Optional[str] = None
+    # Optional callable pinning a group's param slices to their stored
+    # sharding inside the layer scan — anchors the BACKWARD cotangents so
+    # weight grads reduce-scatter per group instead of all-reducing full
+    # fp32 replicas (observed 489 GB/chip/step of waste without it).
+    group_param_constraint: Optional[Any] = None
+
+    def _baxes(self, dim: int) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        axes = tuple(a for a in self.batch_axes if a in self.mesh.axis_names)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        while axes and dim % n != 0:
+            axes = axes[:-1]
+            n = 1
+            for a in axes:
+                n *= self.mesh.shape[a]
+        return axes
+
+    def constrain_batch(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Pin leading dim to batch_axes (+ seq dim to seq_axis when set)."""
+        if self.mesh is None or x.ndim < 1:
+            return x
+        axes = self._baxes(x.shape[0])
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        rest = [None] * (x.ndim - 1)
+        if (
+            self.seq_axis is not None
+            and x.ndim >= 3
+            and self.seq_axis in self.mesh.axis_names
+            and x.shape[1] % self.mesh.shape[self.seq_axis] == 0
+            and x.shape[1] >= self.mesh.shape[self.seq_axis]
+        ):
+            rest[0] = self.seq_axis
+        spec = P(lead, *rest)
+        from jax.sharding import NamedSharding
+
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def constrain_heads(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(B, S, H, hd) attention activations: batch over batch_axes, heads
+        over the TP axis (replicated when H doesn't divide), seq FULL — the
+        canonical Megatron layout inside an attention block; prevents the
+        partitioner from splitting the seq/chunk dims of the flash scan."""
+        if self.mesh is None or x.ndim != 4:
+            return x
+        axes = self._baxes(x.shape[0])
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        m = self.model_axis if self.model_axis in (self.mesh.axis_names or ()) else None
+        if m is not None and (x.shape[2] % self.mesh.shape[m] != 0 or x.shape[2] < self.mesh.shape[m]):
+            m = None
+        from jax.sharding import NamedSharding
+
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(lead, None, m, None))
+        )
+
+    def constrain_logits(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(..., V): batch over batch_axes, vocab over model_axis."""
+        if self.mesh is None:
+            return x
+        axes = self._baxes(x.shape[0])
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        m = self.model_axis if self.model_axis in (self.mesh.axis_names or ()) else None
+        if m is not None and x.shape[-1] % self.mesh.shape[m] != 0:
+            m = None
+        spec = P(lead, *([None] * (x.ndim - 2)), m)
+        from jax.sharding import NamedSharding
+
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+def moe_template(cfg: ArchConfig) -> Dict[str, PSpec]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    t = {
+        # router stays replicated: every shard routes its own tokens
+        "router": PSpec((D, E), (None, None), scale=0.1),
+        "wi": PSpec((E, D, F), ("experts", "embed", "mlp")),
+        "wo": PSpec((E, F, D), ("experts", "mlp", "embed")),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        t["wg"] = PSpec((E, D, F), ("experts", "embed", "mlp"))
+    if cfg.shared_expert:
+        t["shared_wi"] = PSpec((D, F), ("embed", "mlp"))
+        t["shared_wg"] = PSpec((D, F), ("embed", "mlp"))
+        t["shared_wo"] = PSpec((F, D), ("mlp", "embed"))
+    return t
+
+
+def _act(cfg: ArchConfig, up: jnp.ndarray, gate: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        fn = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        return fn(gate.astype(jnp.float32)).astype(up.dtype) * up
+    if cfg.mlp_type == "relu2":
+        return jnp.square(jax.nn.relu(up.astype(jnp.float32))).astype(up.dtype)
+    return jax.nn.gelu(up.astype(jnp.float32)).astype(up.dtype)
+
+
+def _expert_ffn(cfg: ArchConfig, wi, wg, wo, h: jnp.ndarray) -> jnp.ndarray:
+    """h: (E, C, D) -> (E, C, D), batched over experts (MXU grouped GEMM)."""
+    up = jnp.einsum("ecd,edf->ecf", h, wi.astype(h.dtype))
+    g = jnp.einsum("ecd,edf->ecf", h, wg.astype(h.dtype)) if wg is not None else None
+    up = _act(cfg, up, g)
+    return jnp.einsum("ecf,efd->ecd", up, wo.astype(h.dtype))
+
+
+def _router(cfg: ArchConfig, router_w, xf: jnp.ndarray):
+    """xf: (T, D). Returns (gates (T,k), idx (T,k), aux_loss)."""
+    logits = jnp.einsum(
+        "td,de->te", xf.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    top_vals, idx = jax.lax.top_k(logits, cfg.top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)  # renormalize over selected
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    E = cfg.n_experts
+    onehot = jax.nn.one_hot(idx[:, 0], E)  # fraction by top-1 assignment
+    f = onehot.mean(axis=0)
+    pmean = gates_all.mean(axis=0)
+    aux = E * jnp.sum(f * pmean)
+    return gates, idx, aux
+
+
+def _capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    return max(1, int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+
+
+def _shared_expert(cfg: ArchConfig, p, x: jnp.ndarray) -> jnp.ndarray:
+    up = jnp.einsum("...d,df->...f", x, p["shared_wi"].astype(x.dtype))
+    g = jnp.einsum("...d,df->...f", x, p["shared_wg"].astype(x.dtype))
+    up = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("...f,fd->...d", up, p["shared_wo"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# public entry
+# --------------------------------------------------------------------------
+def moe_apply(
+    cfg: ArchConfig, p, x: jnp.ndarray, ctx: Optional[MoeCtx] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    use_ep = (
+        ctx is not None
+        and ctx.mesh is not None
+        and ctx.model_axis is not None
+        and ctx.model_axis in ctx.mesh.axis_names
+        and cfg.n_experts % ctx.mesh.shape[ctx.model_axis] == 0
+    )
+    if use_ep:
+        out, aux = _moe_ep(cfg, p, x, ctx)
+    else:
+        xf = x.reshape(B * S, D)
+        gates, idx, aux = _router(cfg, p["router"], xf)
+        C = _capacity(cfg, B * S)
+        if cfg.moe_dispatch == "dense":
+            out = _dense_dispatch(cfg, p, xf, gates, idx, C)
+        else:
+            out = _gather_dispatch(cfg, p, xf, gates, idx, C)
+        out = out.reshape(B, S, D)
+    if cfg.shared_expert:
+        out = out + _shared_expert(cfg, p, x)
+    return out, aux
+
+
+# --------------------------------------------------------------------------
+# EP: shard_map expert parallelism
+# --------------------------------------------------------------------------
+def _moe_ep(cfg: ArchConfig, p, x: jnp.ndarray, ctx: MoeCtx):
+    mesh = ctx.mesh
+    maxis = ctx.model_axis
+    tp = mesh.shape[maxis]
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // tp
+    B, S, D = x.shape
+    F = cfg.d_ff
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+
+    baxes = tuple(a for a in ctx.batch_axes if a in mesh.axis_names)
+    bsz = 1
+    for a in baxes:
+        bsz *= mesh.shape[a]
+    if B % max(bsz, 1) != 0:
+        baxes = ()  # replicate batch (e.g. long-context B=1)
+    B_loc = B // max(1, _prod(mesh.shape[a] for a in baxes))
+    T_loc = B_loc * S
+    C = _capacity(cfg, T_loc)
+
+    faxes = tuple(
+        a for a in ctx.fsdp_axes if a in mesh.axis_names and a not in (maxis,)
+    )
+    fsz = _prod(mesh.shape[a] for a in faxes)
+    if D % max(fsz, 1) != 0 or not cfg.fsdp:
+        faxes = ()
+    d_spec = faxes if faxes else None
+
+    x_spec = P(baxes if baxes else None, None, None)
+    w_spec = P(maxis, d_spec, None)  # (E, D, F)
+    wo_spec = P(maxis, None, d_spec)  # (E, F, D)
+
+    def body(xl, router_w, wi, wg, wo):
+        Bl, Sl, _ = xl.shape
+        xf = xl.reshape(Bl * Sl, D)
+        gates, idx, aux = _router(cfg, router_w, xf)
+        rank = jax.lax.axis_index(maxis)
+        e0 = rank * E_loc
+        flat_e = idx.reshape(-1)  # (T*k,)
+        local = (flat_e >= e0) & (flat_e < e0 + E_loc)
+        le = jnp.where(local, flat_e - e0, E_loc)  # E_loc == "overflow expert"
+        onehot = jax.nn.one_hot(le, E_loc + 1, dtype=jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - 1)
+        pos = jnp.take_along_axis(pos, le[:, None], axis=1)[:, 0]
+        keep = local & (pos < C)
+        dest = jnp.where(keep, le * C + pos, E_loc * C)
+        src = jnp.repeat(xf, k, axis=0) if k > 1 else xf
+        buf = jnp.zeros((E_loc * C + 1, D), xf.dtype).at[dest].set(src, mode="drop")
+        # FSDP'd weights: gather the d_model shards (bwd = reduce-scatter)
+        if faxes:
+            wi_f = jax.lax.all_gather(wi, faxes, axis=1, tiled=True)
+            wg_f = (
+                jax.lax.all_gather(wg, faxes, axis=1, tiled=True) if gated else None
+            )
+            wo_f = jax.lax.all_gather(wo, faxes, axis=2, tiled=True)
+        else:
+            wi_f, wg_f, wo_f = wi, (wg if gated else None), wo
+        h = _expert_ffn(cfg, wi_f, wg_f, wo_f, buf[: E_loc * C].reshape(E_loc, C, D))
+        hflat = jnp.concatenate([h.reshape(E_loc * C, D), jnp.zeros((1, D), h.dtype)])
+        back = hflat[dest] * gates.reshape(-1)[:, None].astype(h.dtype)
+        out = back.reshape(Bl * Sl, k, D).sum(axis=1)
+        out = jax.lax.psum(out, maxis)  # combine expert shards
+        if baxes:
+            aux = jax.lax.pmean(aux, baxes)  # replicate for out_spec P()
+        return out.reshape(Bl, Sl, D), aux
+
+    wg_in = p.get("wg") if gated else jnp.zeros((), x.dtype)
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_spec, w_spec if gated else P(), wo_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["wi"], wg_in, p["wo"])
+    return out, aux
+
+
+def _prod(it) -> int:
+    n = 1
+    for v in it:
+        n *= v
+    return n
+
+
+# --------------------------------------------------------------------------
+# single-device dispatch strategies
+# --------------------------------------------------------------------------
+def _gather_dispatch(cfg, p, xf, gates, idx, C):
+    """Permutation dispatch: scatter tokens to (E, C) slots, gather back."""
+    T, D = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    flat_e = idx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1  # 0-based slot per expert
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    dest = jnp.where(keep, flat_e * C + pos, E * C)  # overflow -> drop row
+    buf = jnp.zeros((E * C + 1, D), xf.dtype)
+    src = jnp.repeat(xf, k, axis=0) if k > 1 else xf
+    buf = buf.at[dest].set(src, mode="drop")
+    h = _expert_ffn(
+        cfg, p["wi"], p.get("wg") if gated else None, p["wo"],
+        buf[: E * C].reshape(E, C, D),
+    )
+    hflat = jnp.concatenate([h.reshape(E * C, D), jnp.zeros((1, D), h.dtype)])
+    back = hflat[dest]  # (T*k, D)
+    back = back * gates.reshape(-1)[:, None].astype(back.dtype)
+    return back.reshape(T, k, D).sum(axis=1)
+
+
+def _dense_dispatch(cfg, p, xf, gates, idx, C):
+    """One-hot einsum dispatch (naive baseline for §Perf)."""
+    T, D = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    onehot = jax.nn.one_hot(idx, E, dtype=xf.dtype)  # (T, k, E)
+    cum = jnp.cumsum(onehot.reshape(T * k, E), axis=0).reshape(T, k, E)
+    posmat = (cum - onehot) * onehot  # (T, k, E): 0-based slot id
+    slot_oh = jax.nn.one_hot(posmat.sum(-1), C, dtype=xf.dtype) * (
+        (posmat.sum(-1) < C)[..., None]
+    ) * onehot.sum(-1, keepdims=True)
+    disp = jnp.einsum("tke,tkc->ect", onehot, slot_oh)
+    h_in = jnp.einsum("ect,td->ecd", disp, xf)
+    h = _expert_ffn(cfg, p["wi"], p.get("wg") if gated else None, p["wo"], h_in)
+    comb = jnp.einsum("tke,tkc,tk->ect", onehot, slot_oh, gates.astype(xf.dtype))
+    return jnp.einsum("ect,ecd->td", comb, h)

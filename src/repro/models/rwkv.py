@@ -1,0 +1,210 @@
+"""RWKV6 ("Finch") block: data-dependent per-channel decay, token shift.
+
+The hallmark of RWKV6 is the LoRA-produced *data-dependent decay*
+``w_t = exp(-exp(w0 + tanh(x_w A) B))`` per channel.  We implement the
+WKV6 recurrence with a chunked formulation whose every exponent is <= 0
+(chunk-relative log-decay differences), so fp32 is overflow-safe with no
+clamping:
+
+  intra:  A[i,j] = sum_k r_i[k] k_j[k] exp(l_{i-1}[k] - l_j[k])   (j < i)
+          A[i,i] = sum_k r_i[k] u[k] k_i[k]                       (bonus u)
+  state:  S <- exp(l_last) * S + sum_j (k_j exp(l_last - l_j)) (x) v_j
+  inter:  y_i += (r_i exp(l_{i-1}[k])) . S_prev
+
+Simplifications vs. the reference implementation (noted per DESIGN.md):
+static token-shift mix vectors (RWKV5-style) for r/k/v/g; the decay w keeps
+the full data-dependent LoRA path.  Decode state is O(1): (B,H,K,V) wkv
+state + one-token shift states.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import PSpec, norm_apply, norm_template, rms_norm
+
+
+def _dims(cfg: ArchConfig):
+    D = cfg.d_model
+    K = cfg.rwkv_head_size
+    H = D // K
+    return D, H, K
+
+
+def rwkv_template(cfg: ArchConfig) -> Dict[str, PSpec]:
+    D, H, K = _dims(cfg)
+    F = cfg.d_ff
+    lora = 64
+    return {
+        "ln1": norm_template(cfg),
+        "ln2": norm_template(cfg),
+        # time-mix
+        "mu": PSpec((5, D), (None, "embed"), init="const", scale=0.5),
+        "wr": PSpec((D, H, K), ("embed", "heads", "head_dim")),
+        "wk": PSpec((D, H, K), ("embed", "heads", "head_dim")),
+        "wv": PSpec((D, H, K), ("embed", "heads", "head_dim")),
+        "wg": PSpec((D, H, K), ("embed", "heads", "head_dim")),
+        "w0": PSpec((H, K), ("heads", "head_dim"), init="zeros"),
+        "w_lora_a": PSpec((D, lora), ("embed", None)),
+        "w_lora_b": PSpec((lora, H, K), (None, "heads", "head_dim"), scale=0.1),
+        "u": PSpec((H, K), ("heads", "head_dim"), init="zeros"),
+        "ln_x": PSpec((H, K), ("heads", "head_dim"), init="ones"),
+        "wo": PSpec((H, K, D), ("heads", "head_dim", "embed")),
+        # channel-mix
+        "mu_cm": PSpec((2, D), (None, "embed"), init="const", scale=0.5),
+        "wk_cm": PSpec((D, F), ("embed", "mlp")),
+        "wv_cm": PSpec((F, D), ("mlp", "embed")),
+        "wr_cm": PSpec((D, D), ("embed", None)),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Token shift: x_{t-1} (zero / carried state at t=0)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(
+    r: jnp.ndarray,  # (B,S,H,K)
+    k: jnp.ndarray,  # (B,S,H,K)
+    v: jnp.ndarray,  # (B,S,H,K)  (V == K)
+    log_w: jnp.ndarray,  # (B,S,H,K) fp32 <= 0
+    u: jnp.ndarray,  # (H,K)
+    chunk: int,
+    s0: Optional[jnp.ndarray] = None,  # (B,H,K,V)
+    mix_dtype=jnp.float32,  # bf16 halves the dominant (B,Q,Q,H,K) traffic
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential ``lax.scan`` over chunks: working set is ONE chunk's
+    (B,Q,Q,H,K) pairwise-decay tensor (rematerialized in backward), never
+    the full-sequence O(S*Q*H*K) blow-up.  Every exponent is <= 0 (so the
+    decay weights are in [0,1] — safe to round to ``mix_dtype``); the state
+    scan and all exponents stay fp32."""
+    B, S, H, K = r.shape
+    Q = min(chunk, S)
+    while S % Q:  # largest divisor of S not exceeding the requested chunk
+        Q -= 1
+    nc = S // Q
+    f32 = jnp.float32
+
+    def chunks(x):  # (B,S,H,K) -> (nc,B,Q,H,K)
+        return x.reshape(B, nc, Q, H, K).swapaxes(0, 1)
+
+    tri_strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    eye = jnp.eye(Q, dtype=f32)
+    u32 = u.astype(f32)
+
+    @jax.checkpoint
+    def body(s, inp):
+        rc, kc, vc, lw = inp  # (B,Q,H,K) fp32
+        l = jnp.cumsum(lw, axis=1)  # inclusive log-decay
+        l_exc = l - lw  # exclusive
+        # intra: pair[i,j,k] = exp(l_exc[i,k] - l[j,k]), j < i (exponent <= 0)
+        diff = l_exc[:, :, None, :, :] - l[:, None, :, :, :]  # (B,i,j,H,K)
+        pair = jnp.where(tri_strict[None, :, :, None, None], jnp.exp(diff), 0.0)
+        md = mix_dtype
+        A = jnp.einsum(
+            "bihk,bijhk,bjhk->bijh", rc.astype(md), pair.astype(md),
+            kc.astype(md), preferred_element_type=f32,
+        )
+        A_diag = jnp.einsum("bihk,hk,bihk->bih", rc, u32, kc)
+        A = A + A_diag[:, :, None, :] * eye[None, :, :, None]
+        y = jnp.einsum(
+            "bijh,bjhk->bihk", A.astype(md), vc.astype(md),
+            preferred_element_type=f32,
+        )
+        # inter: contribution of the carried state (exponent <= 0)
+        y = y + jnp.einsum("bqhk,bhkv->bqhv", rc * jnp.exp(l_exc), s)
+        # state update (exponents <= 0)
+        k_dec = kc * jnp.exp(l[:, -1:, :, :] - l)
+        s = jnp.exp(l[:, -1])[..., None] * s + jnp.einsum(
+            "bqhk,bqhv->bhkv", k_dec, vc
+        )
+        return s, y
+
+    s_init = jnp.zeros((B, H, K, K), f32) if s0 is None else s0.astype(f32)
+    xs = (chunks(r).astype(f32), chunks(k).astype(f32), chunks(v).astype(f32),
+          chunks(log_w))
+    s_final, ys = jax.lax.scan(body, s_init, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, K)
+    return y.astype(r.dtype), s_final
+
+
+def rwkv_block_apply(
+    cfg: ArchConfig,
+    p,
+    x: jnp.ndarray,  # (B,S,D)
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full RWKV6 layer: time-mix + channel-mix (both with token shift)."""
+    D, H, K = _dims(cfg)
+    B, S, _ = x.shape
+    new_cache = {} if cache is not None else None
+
+    # ---- time mix (pre-norm, paper-standard x = x + TM(LN1 x)) -------------
+    xa = norm_apply(cfg, p["ln1"], x)
+    prev = cache["shift_tm"] if cache is not None else None
+    xp = _shift(xa, prev)
+    mu = p["mu"].astype(x.dtype)  # (5, D): r,k,v,w,g
+    mix = lambda i: xa + mu[i] * (xp - xa)
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["wg"].astype(x.dtype))
+    lora = jnp.einsum(
+        "bsd,dl->bsl", jnp.tanh(xw.astype(jnp.float32)), p["w_lora_a"].astype(jnp.float32)
+    )
+    wexp = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsl,lhk->bshk", jnp.tanh(lora), p["w_lora_b"].astype(jnp.float32)
+    )
+    log_w = -jnp.exp(wexp)  # data-dependent decay, always <= 0
+
+    s0 = cache["wkv"] if cache is not None else None
+    # chunked in ALL modes: the recurrence carries state across chunks, so
+    # prefill-with-cache must NOT fall back to one S-sized chunk (the
+    # (B,S,S,H,K) pair tensor would be terabytes at 32k)
+    chunk = cfg.rwkv_chunk if S > 1 else 1
+    mix_dtype = jnp.bfloat16 if cfg.score_dtype == "bf16" else jnp.float32
+    y, s_final = wkv6_chunked(r, k, v, log_w, p["u"], chunk, s0,
+                              mix_dtype=mix_dtype)
+    y = rms_norm(y, jnp.ones((), y.dtype)) * p["ln_x"].astype(y.dtype)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    tm_out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(y.dtype))
+    x = x + tm_out
+    if cache is not None:
+        new_cache["wkv"] = s_final
+
+    # ---- channel mix (pre-norm) ---------------------------------------------
+    xb = norm_apply(cfg, p["ln2"], x)
+    prev_cm = cache["shift_cm"] if cache is not None else None
+    xp2 = _shift(xb, prev_cm)
+    mu_cm = p["mu_cm"].astype(x.dtype)
+    xk2 = xb + mu_cm[0] * (xp2 - xb)
+    xr2 = xb + mu_cm[1] * (xp2 - xb)
+    kk = jnp.einsum("bsd,df->bsf", xk2, p["wk_cm"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv_cm"].astype(x.dtype))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr2, p["wr_cm"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    out = x + rr * vv
+
+    if cache is not None:
+        # shift states carry the *normed inputs* at the last position
+        new_cache["shift_tm"] = xa[:, -1]
+        new_cache["shift_cm"] = xb[:, -1]
+    return out, new_cache
+
+
+def rwkv_cache_shape(cfg: ArchConfig, batch: int) -> Dict[str, Tuple[int, ...]]:
+    D, H, K = _dims(cfg)
+    return {
+        "wkv": (batch, H, K, K),
+        "shift_tm": (batch, D),
+        "shift_cm": (batch, D),
+    }

@@ -1,0 +1,356 @@
+"""Decoder-stack assembly: heterogeneous layer *groups* scanned over depth.
+
+Every assigned architecture is expressed as a repeating **group** of layers
+(the scanned unit), so `lax.scan` sees a uniform body even when the depth
+pattern is heterogeneous:
+
+    dense / audio / vlm     group = 1 attention layer
+    gemma3 (5 local:1 glob) group = 6 attention layers w/ static windows
+    llama4  (interleaved)   group = [dense-MLP layer, MoE layer]
+    granite (all-MoE)       group = 1 MoE layer
+    rwkv6                   group = 1 RWKV block (time-mix + channel-mix)
+    zamba2 (hybrid)         group = 6 Mamba2 layers + ONE shared attn+MLP
+                            block (weights shared across groups = the
+                            zamba2 "shared transformer block")
+
+Static facts (window size, MoE-or-dense, kind) live in ``LayerDesc`` —
+they differ *within* a group but are identical *across* groups, which is
+exactly the scan-uniformity contract.
+
+The paper hook: a group is the UTP split unit — `ForwardOp.split()` yields
+one task per group; on TPU the dispatcher's plan fuses them back into one
+scanned XLA while-loop (DESIGN.md §2, "whole program is a task tree").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attention_apply, attention_template
+from .layers import (
+    PSpec,
+    mlp_apply,
+    mlp_template,
+    norm_apply,
+    norm_template,
+    stack_tree,
+)
+from .moe import moe_apply, moe_template
+from .rwkv import rwkv_block_apply, rwkv_cache_shape, rwkv_template
+from .ssm import mamba_apply, mamba_cache_shape, mamba_template
+
+
+@dataclass(frozen=True)
+class LayerDesc:
+    kind: str  # 'attn' | 'rwkv' | 'mamba'
+    window: int = 0  # sliding window (0 = global) for attn layers
+    moe: bool = False  # MoE MLP instead of dense MLP
+
+
+def group_layout(cfg: ArchConfig) -> List[LayerDesc]:
+    """The static per-layer plan of one scanned group."""
+    if cfg.family == "rwkv":
+        return [LayerDesc("rwkv")]
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every or cfg.n_layers
+        return [LayerDesc("mamba") for _ in range(k)]
+    if cfg.local_per_global > 0:
+        g = cfg.local_per_global + 1
+        return [
+            LayerDesc(
+                "attn",
+                window=cfg.local_window if i < cfg.local_per_global else 0,
+                moe=cfg.is_moe,
+            )
+            for i in range(g)
+        ]
+    if cfg.is_moe and cfg.moe_interleave > 1:
+        # llama4-style: dense layer then routed layer, repeating
+        return [
+            LayerDesc("attn", moe=(i % cfg.moe_interleave == cfg.moe_interleave - 1))
+            for i in range(cfg.moe_interleave)
+        ]
+    return [LayerDesc("attn", moe=cfg.is_moe)]
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    layout = group_layout(cfg)
+    if cfg.n_layers % len(layout) != 0:
+        raise ValueError(
+            f"{cfg.name}: n_layers={cfg.n_layers} not divisible by group size {len(layout)}"
+        )
+    return cfg.n_layers // len(layout)
+
+
+def has_shared_block(cfg: ArchConfig) -> bool:
+    return cfg.family == "hybrid" and cfg.hybrid_attn_every > 0
+
+
+# --------------------------------------------------------------------------
+# templates
+# --------------------------------------------------------------------------
+def _layer_template(cfg: ArchConfig, desc: LayerDesc) -> Dict[str, Any]:
+    if desc.kind == "rwkv":
+        return rwkv_template(cfg)
+    if desc.kind == "mamba":
+        return {"ln1": norm_template(cfg), "mamba": mamba_template(cfg)}
+    t = {
+        "ln1": norm_template(cfg),
+        "attn": attention_template(cfg),
+        "ln2": norm_template(cfg),
+    }
+    t["mlp"] = moe_template(cfg) if desc.moe else mlp_template(cfg)
+    return t
+
+
+def shared_block_template(cfg: ArchConfig) -> Dict[str, Any]:
+    """zamba2 shared attention+MLP block (one copy, reused every group)."""
+    return {
+        "ln1": norm_template(cfg),
+        "attn": attention_template(cfg),
+        "ln2": norm_template(cfg),
+        "mlp": mlp_template(cfg),
+    }
+
+
+def group_template(cfg: ArchConfig) -> Dict[str, Any]:
+    return {"layers": [_layer_template(cfg, d) for d in group_layout(cfg)]}
+
+
+def stack_template(cfg: ArchConfig) -> Dict[str, Any]:
+    """Full decoder template: scanned groups + (optional) shared block."""
+    t: Dict[str, Any] = {"groups": stack_tree(group_template(cfg), n_groups(cfg))}
+    if has_shared_block(cfg):
+        t["shared"] = shared_block_template(cfg)
+    return t
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+def _layer_cache_shape(
+    cfg: ArchConfig, desc: LayerDesc, batch: int, max_seq: int
+) -> Dict[str, Tuple[Tuple[int, ...], Tuple[Optional[str], ...], Any]]:
+    """name -> (shape, logical axes, dtype) for one layer's decode state."""
+    cd = cfg.cache_dtype
+    if desc.kind == "rwkv":
+        s = rwkv_cache_shape(cfg, batch)
+        return {
+            "wkv": (s["wkv"], ("batch", "heads", "head_dim", None), jnp.float32),
+            "shift_tm": (s["shift_tm"], ("batch", "embed"), cd),
+            "shift_cm": (s["shift_cm"], ("batch", "embed"), cd),
+        }
+    if desc.kind == "mamba":
+        s = mamba_cache_shape(cfg, batch)
+        return {
+            "ssm": (s["ssm"], ("batch", "heads", "state", "head_dim"), jnp.float32),
+            "conv_x": (s["conv_x"], ("batch", None, "heads", "head_dim"), cd),
+            "conv_b": (s["conv_b"], ("batch", None, None, "state"), cd),
+            "conv_c": (s["conv_c"], ("batch", None, None, "state"), cd),
+        }
+    seq = (
+        min(max_seq, desc.window) if (cfg.windowed_cache and desc.window > 0) else max_seq
+    )
+    kv = (batch, seq, cfg.n_kv, cfg.hd)
+    ax = ("batch", "seq", "kv_heads", "head_dim")
+    return {"k": (kv, ax, cd), "v": (kv, ax, cd)}
+
+
+def cache_layout(
+    cfg: ArchConfig, batch: int, max_seq: int
+) -> Tuple[Dict[str, Any], Dict[str, Any], Dict[str, Any]]:
+    """Returns (shapes, logical, dtypes) trees for the whole stack's cache.
+
+    Every leaf carries a leading ``n_groups`` dim (logical axis 'layers') so
+    the scan can slice per group.
+    """
+    G = n_groups(cfg)
+    layout = group_layout(cfg)
+    shapes: Dict[str, Any] = {"layers": []}
+    logical: Dict[str, Any] = {"layers": []}
+    dtypes: Dict[str, Any] = {"layers": []}
+    for d in layout:
+        ls = _layer_cache_shape(cfg, d, batch, max_seq)
+        shapes["layers"].append({k: (G,) + v[0] for k, v in ls.items()})
+        logical["layers"].append({k: ("layers",) + v[1] for k, v in ls.items()})
+        dtypes["layers"].append({k: v[2] for k, v in ls.items()})
+    if has_shared_block(cfg):
+        # the shared block runs once per group -> per-group KV cache
+        kv = (G, batch, max_seq, cfg.n_kv, cfg.hd)
+        ax = ("layers", "batch", "seq", "kv_heads", "head_dim")
+        shapes["shared"] = {"k": kv, "v": kv}
+        logical["shared"] = {"k": ax, "v": ax}
+        dtypes["shared"] = {"k": cfg.cache_dtype, "v": cfg.cache_dtype}
+    return shapes, logical, dtypes
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    shapes, _, dtypes = cache_layout(cfg, batch, max_seq)
+    return jax.tree.map(
+        lambda s, dt: jnp.zeros(s, dt), shapes, dtypes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int):
+    shapes, _, dtypes = cache_layout(cfg, batch, max_seq)
+    return jax.tree.map(
+        lambda s, dt: jax.ShapeDtypeStruct(s, dt), shapes, dtypes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def cache_logical(cfg: ArchConfig, batch: int = 1, max_seq: int = 8):
+    _, logical, _ = cache_layout(cfg, batch, max_seq)
+    return logical
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _layer_apply(
+    cfg: ArchConfig,
+    desc: LayerDesc,
+    p: Dict[str, Any],
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict[str, Any]],
+    cache_pos,
+    moe_ctx,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if desc.kind == "rwkv":
+        x, new_cache = rwkv_block_apply(cfg, p, x, cache)
+        return x, new_cache, aux
+    if desc.kind == "mamba":
+        h, new_inner = mamba_apply(cfg, p["mamba"], norm_apply(cfg, p["ln1"], x), cache)
+        return x + h, new_inner, aux
+    # attention layer
+    kv_cache = {"k": cache["k"], "v": cache["v"]} if cache is not None else None
+    h, new_kv = attention_apply(
+        cfg,
+        p["attn"],
+        norm_apply(cfg, p["ln1"], x),
+        positions,
+        window=desc.window,
+        cache=kv_cache,
+        cache_pos=cache_pos,
+        ctx=moe_ctx,
+    )
+    x = x + h
+    h2 = norm_apply(cfg, p["ln2"], x)
+    if desc.moe:
+        out, aux = moe_apply(cfg, p["mlp"], h2, ctx=moe_ctx)
+    else:
+        out = mlp_apply(cfg, p["mlp"], h2)
+    x = x + out
+    return x, new_kv, aux
+
+
+def _group_apply(
+    cfg: ArchConfig,
+    layout: List[LayerDesc],
+    p_group: Dict[str, Any],
+    p_shared: Optional[Dict[str, Any]],
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache_group: Optional[Dict[str, Any]],
+    cache_pos,
+    moe_ctx,
+):
+    new_cache: Dict[str, Any] = {"layers": []}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, desc in enumerate(layout):
+        c_i = cache_group["layers"][i] if cache_group is not None else None
+        x, nc, aux = _layer_apply(
+            cfg, desc, p_group["layers"][i], x, positions, c_i, cache_pos, moe_ctx
+        )
+        new_cache["layers"].append(nc if nc is not None else {})
+        aux_total = aux_total + aux
+    if p_shared is not None:
+        sc = cache_group.get("shared") if cache_group is not None else None
+        x, nkv, _ = _layer_apply(
+            cfg, LayerDesc("attn"), p_shared, x, positions, sc, cache_pos, moe_ctx
+        )
+        new_cache["shared"] = nkv if nkv is not None else {}
+    if cache_group is None:
+        return x, None, aux_total
+    return x, new_cache, aux_total
+
+
+def _remat_wrap(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # 'full'
+
+
+def stack_apply(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    x: jnp.ndarray,  # (B, S, D) embedded input
+    positions: jnp.ndarray,  # (B, S)
+    cache: Optional[Dict[str, Any]] = None,
+    cache_pos=None,
+    moe_ctx=None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]], jnp.ndarray]:
+    """Scan the layer groups. Returns (hidden, new_cache, aux_loss)."""
+    layout = group_layout(cfg)
+    p_shared = params.get("shared")
+    G = n_groups(cfg)
+
+    def body(carry, xs):
+        h, aux = carry
+        p_g, c_g = xs
+        if cfg.cast_in_scan:
+            # convert sits INSIDE the loop: the transpose (bf16 cotangent ->
+            # fp32 master grad) lands outside, so per-group weight-grad
+            # reductions move bf16, not fp32
+            cd = cfg.compute_dtype
+            p_g = jax.tree.map(
+                lambda p: p.astype(cd)
+                if jnp.issubdtype(p.dtype, jnp.floating) and p.ndim >= 2
+                else p,
+                p_g,
+            )
+        if moe_ctx is not None:
+            # anchor the residual stream to the DP layout every group —
+            # without this the partitioner may all-gather the batch to
+            # chase the FSDP weight sharding (see MoeCtx docstring)
+            h = moe_ctx.constrain_batch(h)
+            if moe_ctx.group_param_constraint is not None:
+                p_g = moe_ctx.group_param_constraint(p_g)
+        h, new_c, aux_g = _group_apply(
+            cfg, layout, p_g, p_shared, h, positions, c_g, cache_pos, moe_ctx
+        )
+        return (h, aux + aux_g), new_c
+
+    body = _remat_wrap(cfg, body)
+
+    if cfg.scan_layers:
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["groups"], cache)
+        )
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for g in range(G):
+            p_g = jax.tree.map(lambda a: a[g], params["groups"])
+            c_g = jax.tree.map(lambda a: a[g], cache) if cache is not None else None
+            (x, aux), nc = body((x, aux), (p_g, c_g))
+            new_caches.append(nc)
+        new_cache = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+            if cache is not None
+            else None
+        )
+    return x, new_cache, aux

@@ -1,0 +1,30 @@
+"""LR schedules (warmup + cosine / WSD)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def wsd(peak: float, warmup: int, total: int, decay_frac: float = 0.1):
+    """Warmup-Stable-Decay."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        dec = peak * (1.0 - prog)
+        return jnp.where(step < warmup, warm, jnp.where(step < decay_start, peak, dec))
+
+    return fn

@@ -1,0 +1,3 @@
+from .engine import EngineConfig, Request, ServeEngine
+
+__all__ = ["EngineConfig", "Request", "ServeEngine"]

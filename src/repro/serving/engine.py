@@ -1,0 +1,190 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+A ``ServeEngine`` owns the params, a slot-pooled KV cache and two jitted
+programs (prefill, decode) built on the same model functions the dry-run
+compiles.  Requests queue up; each engine step
+
+  1. admits queued requests into free slots — a B=1 prefill fills a fresh
+     cache which is scattered into the slot's cache lane,
+  2. runs ONE batched decode step for all active slots (per-slot
+     positions: the attention cache path takes a ``cache_pos`` vector, so
+     sequences of different lengths share one compiled program —
+     continuous batching),
+  3. samples (greedy / temperature / top-k), appends, retires finished
+     slots and immediately refills them from the queue.
+
+Prompts prefill at exact length (one compile per distinct prompt length —
+fine at engine scale; length-bucketing with masked tails is the production
+extension for attention families, but is unsafe for recurrent families
+where padding corrupts the integrated state).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models.model import Model, build_model
+
+
+@dataclass
+class EngineConfig:
+    slots: int = 4
+    max_seq: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    top_k: int = 0
+    eos_token: int = -1  # -1 = never stops early
+    seed: int = 0
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32 tokens ((S, D) float embeds for stub archs)
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    t_submit: float = field(default_factory=time.time)
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, ecfg: Optional[EngineConfig] = None):
+        self.cfg = cfg
+        self.ecfg = ecfg or EngineConfig()
+        self.model: Model = build_model(cfg)
+        self.params = params
+        B, S = self.ecfg.slots, self.ecfg.max_seq
+        self.cache = self.model.init_cache(B, S)
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.slot_pos = np.zeros(B, dtype=np.int32)  # next write index
+        self.slot_tok = np.zeros(B, dtype=np.int32)  # last sampled token
+        self.requests: List[Request] = []
+        self.queue: List[Request] = []
+        self._rng = jax.random.PRNGKey(self.ecfg.seed)
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn, static_argnames=("pad_len",))
+        self._scatter = jax.jit(self._scatter_fn, static_argnames=("slot",))
+        self.decode_steps = 0
+
+    # -- jitted programs --------------------------------------------------------
+    def _prefill_fn(self, params, prompt_tokens, pad_len):
+        """prompt_tokens (1, pad_len) -> (last real logits handled by caller)."""
+        cache = self.model.init_cache(1, self.ecfg.max_seq)
+        batch = (
+            {"embeds": prompt_tokens}
+            if self.cfg.frontend
+            else {"tokens": prompt_tokens}
+        )
+        logits, cache = self.model.prefill(params, batch, cache)
+        return logits, cache
+
+    def _scatter_fn(self, pool, one, slot):
+        # every cache leaf has layout (G, B, ...): batch lane is axis 1
+        return jax.tree.map(lambda p, o: p.at[:, slot].set(o[:, 0]), pool, one)
+
+    def _decode_fn(self, params, cache, tokens, pos, rng):
+        """tokens (B,) int32; pos (B,) int32 -> (next (B,), new_cache)."""
+        if self.cfg.frontend:
+            # stub-frontend: map token id to its deterministic embedding
+            emb = jax.random.normal(
+                jax.random.PRNGKey(7), (self.cfg.vocab, self.cfg.d_model)
+            ) / jnp.sqrt(float(self.cfg.d_model))
+            batch = {"embeds": emb[tokens][:, None].astype(self.cfg.compute_dtype)}
+        else:
+            batch = {"tokens": tokens[:, None]}
+        logits, new_cache = self.model.decode_step(params, cache, batch, pos)
+        e = self.ecfg
+        if e.temperature <= 0.0:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            l = logits / e.temperature
+            if e.top_k > 0:
+                kth = jax.lax.top_k(l, e.top_k)[0][:, -1:]
+                l = jnp.where(l < kth, -jnp.inf, l)
+            nxt = jax.random.categorical(rng, l, axis=-1)
+        return nxt.astype(jnp.int32), new_cache
+
+    # -- API ---------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.requests.append(req)
+        self.queue.append(req)
+
+    def _sample_host(self, logits: jax.Array) -> int:
+        e = self.ecfg
+        if e.temperature <= 0.0:
+            return int(jax.device_get(jnp.argmax(logits, axis=-1))[0])
+        self._rng, k = jax.random.split(self._rng)
+        return int(jax.device_get(jax.random.categorical(k, logits / e.temperature))[0])
+
+    def _admit(self) -> None:
+        for slot in range(self.ecfg.slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            S = len(req.prompt)
+            assert S + req.max_new_tokens <= self.ecfg.max_seq, "prompt too long"
+            toks = np.asarray(req.prompt, dtype=np.int32)[None]
+            logits, one_cache = self._prefill(self.params, jnp.asarray(toks), pad_len=S)
+            self.cache = self._scatter(self.cache, one_cache, slot=slot)
+            tok = self._sample_host(logits)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = S
+            self.slot_tok[slot] = tok
+            req.out_tokens.append(tok)
+            req.t_first = time.time()
+
+    def step(self) -> int:
+        """One engine iteration; returns number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        self._rng, k = jax.random.split(self._rng)
+        nxt, self.cache = self._decode(
+            self.params,
+            self.cache,
+            jnp.asarray(self.slot_tok),
+            jnp.asarray(self.slot_pos),
+            k,
+        )
+        nxt = np.asarray(jax.device_get(nxt))
+        self.decode_steps += 1
+        for i in active:
+            req = self.slot_req[i]
+            self.slot_pos[i] += 1
+            tok = int(nxt[i])
+            self.slot_tok[i] = tok
+            req.out_tokens.append(tok)
+            if (
+                len(req.out_tokens) >= req.max_new_tokens
+                or tok == self.ecfg.eos_token
+            ):
+                req.done = True
+                req.t_done = time.time()
+                self.slot_req[i] = None
+                self.slot_pos[i] = 0
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) and (
+            steps < max_steps
+        ):
+            self.step()
+            steps += 1
+        return [r for r in self.requests if r.done]

@@ -1,0 +1,5 @@
+from .checkpoint import Checkpointer
+from .step_ops import UTPTrainStep
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["Checkpointer", "Trainer", "TrainerConfig", "UTPTrainStep"]

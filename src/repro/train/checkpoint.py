@@ -1,0 +1,173 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-restorable.
+
+Layout (one directory per step):
+
+    <dir>/step_000120.tmp-<nonce>/   # written here first
+        arrays.npz                   # flattened tree leaves (host numpy)
+        meta.json                    # step, tree structure, shapes, checksum
+    <dir>/step_000120/               # atomic rename after fsync
+
+Properties needed at 1000-node scale, scaled to this harness:
+  * **atomic**   — a crash mid-save never corrupts the latest checkpoint
+    (tmp dir + rename; restore scans only completed dirs).
+  * **async**    — ``save_async`` snapshots device arrays to host, then
+    writes on a background thread; training continues immediately.
+  * **elastic**  — arrays are stored *unsharded* (gathered host views), so
+    restore can re-place onto a different mesh/sharding than the one that
+    saved (``restore(..., shardings=new)``) — N pods -> M pods restart.
+    (A per-shard layout with a global index is the production extension;
+    the gathered layout is exact for single-host and documents the seam.)
+  * **self-validating** — per-leaf CRCs catch torn/corrupt files.
+  * **GC**       — keeps the most recent ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import zlib
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved_step: Optional[int] = None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, state: Any, block: bool = True) -> None:
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        if block:
+            self._write(step, host)
+        else:
+            self.wait()  # one in-flight save at a time
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True
+            )
+            self._thread.start()
+
+    def save_async(self, step: int, state: Any) -> None:
+        self.save(step, state, block=False)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        flat = _flatten_with_paths(host_tree)
+        treedef = jax.tree.structure(host_tree)
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp-{os.getpid()}-{time.time_ns()}"
+        tmp.mkdir(parents=True)
+        try:
+            arrays = {k: np.asarray(v) for k, v in flat.items()}
+            np.savez(tmp / "arrays.npz", **arrays)
+            meta = {
+                "step": step,
+                "treedef": str(treedef),
+                "keys": sorted(arrays),
+                "crc": {
+                    k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+                    for k, v in arrays.items()
+                },
+                "shapes": {k: list(v.shape) for k, v in arrays.items()},
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+                "time": time.time(),
+            }
+            with open(tmp / "meta.json", "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self.last_saved_step = step
+            self._gc()
+        finally:
+            if tmp.exists():
+                shutil.rmtree(tmp, ignore_errors=True)
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") and ".tmp" not in p.name:
+                if (p / "meta.json").exists():
+                    out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        target: Any,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+        validate: bool = True,
+    ) -> Tuple[Any, int]:
+        """Restore into the structure of ``target``.
+
+        ``shardings``: optional tree matching ``target`` — device placement
+        for the restored leaves (may describe a DIFFERENT mesh than the one
+        that saved: elastic restart).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        meta = json.loads((d / "meta.json").read_text())
+        arrays = np.load(d / "arrays.npz")
+        if validate:
+            for k, crc in meta["crc"].items():
+                got = zlib.crc32(np.ascontiguousarray(arrays[k]).tobytes())
+                if got != crc:
+                    raise IOError(f"checkpoint {d} leaf {k}: CRC mismatch")
+        flat_t = _flatten_with_paths(target)
+        flat_s = _flatten_with_paths(shardings) if shardings is not None else {}
+        out = {}
+        for k, tgt in flat_t.items():
+            if k not in arrays:
+                raise KeyError(f"checkpoint missing leaf {k}")
+            v = arrays[k]
+            if tuple(v.shape) != tuple(tgt.shape):
+                raise ValueError(f"{k}: shape {v.shape} != target {tgt.shape}")
+            v = v.astype(tgt.dtype)
+            sh = flat_s.get(k)
+            out[k] = (
+                jax.make_array_from_callback(v.shape, sh, lambda idx, v=v: v[idx])
+                if sh is not None
+                else jax.device_put(v)
+            )
+        # rebuild tree in target structure
+        leaves_order = [
+            out[k] for k in _flatten_with_paths(target)
+        ]
+        tree = jax.tree.unflatten(jax.tree.structure(target), leaves_order)
+        return tree, step

@@ -1,0 +1,286 @@
+"""The LM train step expressed as a UTP task tree (paper §2.3 applied to
+the framework's own training loop).
+
+    TrainStepOp.split ->  [MicroGradOp x m]  ->  GradSumOp  ->  AdamOp
+                           (reads params,          (reads grads_i*)   (RW params/opt)
+                            batch block i,
+                            writes grads_i)
+
+The *same* submission code runs under two executor stacks, selected by the
+task-flow graph — the paper's G1/G2 story on the LM side:
+
+  ``eager``  (cpuBLAS-wrapper analog): every leaf task executes
+             immediately, one XLA call per task.
+  ``fused``  (the TPU-optimal plan): the dispatcher's wave schedule is
+             COMPILED — all tasks trace into one jitted program, which is
+             exactly the ``launch/steps.py`` train step.  This is the
+             "whole program is a task tree" limit case from DESIGN.md §2.
+
+Data handles are 1x1 (or mx1 for the microbatched input) ``GData``
+surrogates: the UTP dependency machinery (versioning, waves) works on the
+handles while the pytree values live in the executor's store.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import Access, Dispatcher, GData, GTask, Operation
+from ..core.executors.base import Executor
+
+
+# --------------------------------------------------------------------------
+# tree-valued operations
+# --------------------------------------------------------------------------
+class TreeOp(Operation):
+    """Operation whose leaves act on pytrees held in the executor store."""
+
+    def run_tree(self, task: GTask, store: Dict[int, Any]) -> None:
+        raise NotImplementedError
+
+
+class MicroGradOp(TreeOp):
+    name = "micrograd"
+
+    def __init__(self, loss_fn: Callable):
+        self.loss_fn = loss_fn
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READ, Access.WRITE]  # params, batch_i, grads_i
+
+    def run_tree(self, task, store):
+        params = store[task.args[0].data.id]
+        mb_index = task.args[1].block_index()[0]
+        batch = store[task.args[1].data.id]
+        mb = jax.tree.map(lambda x: x[mb_index], batch)
+        (loss, metrics), g = jax.value_and_grad(self.loss_fn, has_aux=True)(
+            params, mb
+        )
+        store[task.args[2].data.id] = g
+        store.setdefault("metrics", []).append(metrics)
+
+
+class GradSumOp(TreeOp):
+    name = "gradsum"
+
+    def default_modes(self, n):
+        return [Access.READ] * (n - 1) + [Access.WRITE]
+
+    def run_tree(self, task, store):
+        parts = [store[v.data.id] for v in task.args[:-1]]
+        s = parts[0]
+        for p in parts[1:]:
+            s = jax.tree.map(lambda a, b: a + b, s, p)
+        n = float(len(parts))
+        store[task.args[-1].data.id] = jax.tree.map(lambda a: a / n, s)
+
+
+class AdamOp(TreeOp):
+    name = "adam"
+
+    def __init__(self, opt_cfg):
+        self.opt_cfg = opt_cfg
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READWRITE, Access.READWRITE]
+
+    def run_tree(self, task, store):
+        from .. import optim
+
+        grads = store[task.args[0].data.id]
+        params = store[task.args[1].data.id]
+        opt = store[task.args[2].data.id]
+        new_p, new_o, m = optim.update(grads, opt, params, self.opt_cfg)
+        store[task.args[1].data.id] = new_p
+        store[task.args[2].data.id] = new_o
+        store.setdefault("metrics", []).append(m)
+
+
+class TrainStepOp(TreeOp):
+    """Root task: splits into the microbatch/reduce/update children.
+
+    Intermediate handles (per-microbatch grads, the reduced grads) are
+    created ONCE and reused across steps so the fused executor's compiled
+    program is keyed on a stable structure — step 2 onward is a cache hit.
+    """
+
+    name = "train_step"
+
+    def __init__(self, loss_fn, opt_cfg, microbatches: int):
+        self.loss_fn = loss_fn
+        self.opt_cfg = opt_cfg
+        self.m = microbatches
+        self._micrograd = MicroGradOp(loss_fn)
+        self._gradsum = GradSumOp()
+        self._adam = AdamOp(opt_cfg)
+        self._grads = [GData((1, 1), name=f"grads{i}") for i in range(self.m)]
+        self._total = GData((1, 1), name="grads")
+
+    def default_modes(self, n):
+        return [Access.READWRITE, Access.READWRITE, Access.READ]
+
+    def can_split(self, task):
+        return True
+
+    def split(self, task, submit):
+        params_v, opt_v, batch_v = task.args
+        for i in range(self.m):
+            submit(
+                GTask(
+                    self._micrograd,
+                    task,
+                    [params_v, batch_v(i, 0), self._grads[i].root_view()],
+                )
+            )
+        submit(
+            GTask(
+                self._gradsum,
+                task,
+                [g.root_view() for g in self._grads] + [self._total.root_view()],
+            )
+        )
+        submit(
+            GTask(self._adam, task, [self._total.root_view(), params_v, opt_v])
+        )
+
+
+# --------------------------------------------------------------------------
+# executors
+# --------------------------------------------------------------------------
+class EagerTreeExecutor(Executor):
+    """One XLA dispatch per leaf task (the paper's immediate-execution leaf)."""
+
+    name = "tree_eager"
+
+    def __init__(self, store: Dict[int, Any], **kw):
+        super().__init__(**kw)
+        self.store = store
+
+    def execute_wave(self, wave):
+        for t in wave:
+            t.op.run_tree(t, self.store)
+            self.stats["tasks"] += 1
+            self._finished(t)
+        return len(wave)
+
+
+class FusedTreeExecutor(Executor):
+    """Compile the ENTIRE wave schedule into one jitted program.
+
+    The dispatcher's level schedule fixes a topological order; tracing the
+    tasks in that order through a functional store turns the task DAG into
+    a single XLA computation — the TPU-optimal plan for the paper's
+    configurable task flow.
+    """
+
+    name = "tree_fused"
+
+    def __init__(self, store: Dict[int, Any], donate: bool = False, **kw):
+        super().__init__(**kw)
+        self.store = store
+        self.donate = donate
+        self._cache: Dict[Any, Callable] = {}
+
+    def execute_waves(self, waves):
+        order = [t for w in waves for t in w]
+        key = tuple((t.op.name, tuple(v.data.id for v in t.args)) for t in order)
+        # external inputs = handles READ before any task WRITES them; values
+        # produced inside the schedule (microbatch grads etc.) must not leak
+        # back in as arguments or the program signature grows call-to-call.
+        written = set()
+        ext = set()
+        for t in order:
+            for v, m in t.accesses():
+                if m.reads and v.data.id not in written and v.data.id in self.store:
+                    ext.add(v.data.id)
+            for v in t.outputs():
+                written.add(v.data.id)
+        in_ids = sorted(ext)
+
+        if key not in self._cache:
+            def fused(vals: Dict[int, Any]):
+                st: Dict[Any, Any] = dict(vals)
+                for t in order:
+                    t.op.run_tree(t, st)
+                return {k: v for k, v in st.items() if k != "metrics"}, st.get(
+                    "metrics", []
+                )
+
+            self._cache[key] = jax.jit(fused)
+            self.stats["compiles"] += 1
+        out, metrics = self._cache[key]({k: self.store[k] for k in in_ids})
+        self.store.update(out)
+        self.store["metrics"] = metrics
+        for t in order:
+            self.stats["tasks"] += 1
+            self._finished(t)
+        return len(order)
+
+    def execute_wave(self, wave):  # pragma: no cover - waves run fused
+        return self.execute_waves([wave])
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+class UTPTrainStep:
+    """Submit/run the train-step task tree through the UTP dispatcher.
+
+    Handles, the root operation and the executor are created once; every
+    call submits a fresh task tree over the SAME handles, so the fused
+    executor's compiled program is reused (compile-once, run-many)."""
+
+    def __init__(self, loss_fn, opt_cfg, microbatches: int = 1, executor: str = "fused"):
+        self.loss_fn = loss_fn
+        self.opt_cfg = opt_cfg
+        self.m = microbatches
+        self.executor_kind = executor
+        self.op = TrainStepOp(loss_fn, opt_cfg, microbatches)
+        self.h_params = GData((1, 1), name="params")
+        self.h_opt = GData((1, 1), name="opt")
+        self.h_batch = GData(
+            (self.m, 1), partitions=((self.m, 1),), name="batch"
+        )
+        self.store: Dict[Any, Any] = {}
+        self.executor = (
+            FusedTreeExecutor(self.store)
+            if executor == "fused"
+            else EagerTreeExecutor(self.store)
+        )
+
+    def __call__(self, params, opt_state, batch):
+        store = self.store
+        store.pop("metrics", None)
+        d = Dispatcher(graph="g2")  # graph name only picks split depth here
+        self.executor.on_task_finished = d._on_finished
+        d.executor = self.executor
+
+        store[self.h_params.id] = params
+        store[self.h_opt.id] = opt_state
+        store[self.h_batch.id] = jax.tree.map(
+            lambda x: x.reshape((self.m, x.shape[0] // self.m) + x.shape[1:]), batch
+        )
+
+        root = GTask(
+            self.op,
+            None,
+            [
+                self.h_params.root_view(),
+                self.h_opt.root_view(),
+                self.h_batch.root_view(),
+            ],
+        )
+        d.submit_task(root)
+        d.run()
+        metrics = store.get("metrics", [])
+        agg = {}
+        if metrics:
+            keys = metrics[0].keys()
+            agg = {
+                k: jnp.mean(jnp.stack([jnp.asarray(m[k]) for m in metrics if k in m]))
+                for k in keys
+            }
+        return store[self.h_params.id], store[self.h_opt.id], agg

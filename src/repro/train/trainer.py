@@ -1,0 +1,218 @@
+"""Training loop with checkpoint/restart, failure recovery and straggler
+watchdog — the step program comes from the SAME ``StepPlan`` the dry-run
+compiles, so what we validate offline is what runs.
+
+Fault-tolerance model (scaled from the 1000-node design to this harness):
+  * **checkpoint/restart** — async atomic checkpoints every
+    ``ckpt_every`` steps; on construction the trainer auto-resumes from the
+    latest complete checkpoint (data iterator included: the synthetic
+    pipeline is an indexed pure function, so the batch index IS the data
+    state).
+  * **step failure recovery** — a failing step (device error, NaN loss if
+    ``abort_on_nan``) triggers restore-from-last-checkpoint and replay;
+    ``max_failures`` bounds the retry budget.  On a real fleet the same
+    hook receives the coordinator's "node died" signal; here failures are
+    injectable for tests (``inject_failure``).
+  * **straggler watchdog** — per-step wall times feed a rolling median;
+    steps slower than ``straggler_factor`` x median are counted and
+    surfaced (the production action — re-shard around the slow host via
+    elastic restart — reuses the elastic ``Checkpointer.restore``).
+  * **preemption** — SIGTERM triggers a synchronous final checkpoint.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from .. import optim
+from ..configs.base import ArchConfig, ShapeConfig
+from ..data.pipeline import DataConfig, SyntheticLMDataset, sharded_batches
+from ..launch import sharding as shlib
+from ..launch.steps import StepPlan, make_train_step
+from ..models.model import build_model
+from .checkpoint import Checkpointer
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    abort_on_nan: bool = True
+    max_failures: int = 3
+    straggler_factor: float = 3.0
+
+
+@dataclass
+class StepStats:
+    times: List[float] = field(default_factory=list)
+    stragglers: int = 0
+
+    def record(self, dt: float, factor: float) -> bool:
+        """Returns True if this step counts as a straggler."""
+        med = float(np.median(self.times)) if self.times else dt
+        self.times.append(dt)
+        if len(self.times) > 200:
+            self.times.pop(0)
+        if len(self.times) > 5 and dt > factor * med:
+            self.stragglers += 1
+            return True
+        return False
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        shape: ShapeConfig,
+        mesh,
+        tcfg: Optional[TrainerConfig] = None,
+        opt_cfg: Optional[optim.AdamWConfig] = None,
+        data_cfg: Optional[DataConfig] = None,
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.tcfg = tcfg or TrainerConfig()
+        self.model = build_model(cfg)
+        self.opt_cfg = opt_cfg or optim.AdamWConfig(state_dtype=cfg.optim_state_dtype)
+        self.plan: StepPlan = make_train_step(cfg, mesh, shape, opt_cfg=self.opt_cfg)
+        self.step_fn = self.plan.jitted()
+        self.ckpt = Checkpointer(self.tcfg.ckpt_dir, keep=self.tcfg.ckpt_keep)
+        self.stats = StepStats()
+        self.data_cfg = data_cfg or DataConfig(
+            vocab=cfg.vocab, seq_len=shape.seq_len, global_batch=shape.global_batch,
+            seed=self.tcfg.seed,
+        )
+        self.dataset = SyntheticLMDataset(self.data_cfg)
+        self._preempted = False
+        self.metrics_log: List[Dict[str, float]] = []
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self):
+        rules = shlib.train_rules(self.cfg)
+        p_shard = shlib.tree_shardings(
+            self.model.logical, self.model.abstract(), self.mesh, rules
+        )
+        with self.mesh:
+            params = jax.jit(
+                self.model.init, out_shardings=p_shard
+            )(jax.random.PRNGKey(self.tcfg.seed))
+            opt_state = jax.jit(
+                lambda p: optim.init(p, self.opt_cfg),
+                out_shardings={"m": p_shard, "v": p_shard,
+                               "count": shlib.replicated(self.mesh)},
+            )(params)
+        return params, opt_state
+
+    def state_shardings(self):
+        return self.plan.in_shardings[0], self.plan.in_shardings[1]
+
+    # -- fault handling ---------------------------------------------------------
+    def _install_sigterm(self, get_state):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    # -- loop ------------------------------------------------------------------
+    def train(
+        self,
+        inject_failure: Optional[Callable[[int], bool]] = None,
+        on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    ) -> Dict[str, Any]:
+        t = self.tcfg
+        start_step = 0
+        params = opt_state = None
+        if self.ckpt.latest_step() is not None:
+            params, opt_state, start_step = self._restore()
+            print(f"[trainer] resumed from step {start_step}")
+        if params is None:
+            params, opt_state = self.init_state()
+        self._install_sigterm(lambda: (params, opt_state))
+
+        b_shards = self.plan.in_shardings[2]
+        batches = sharded_batches(
+            self.dataset, b_shards, start_index=start_step, embeds_cfg=self.cfg
+        )
+        failures = 0
+        step = start_step
+        while step < t.steps and not self._preempted:
+            batch = next(batches)
+            t0 = time.time()
+            try:
+                if inject_failure is not None and inject_failure(step):
+                    raise RuntimeError(f"injected failure at step {step}")
+                with self.mesh:
+                    params, opt_state, metrics = self.step_fn(
+                        params, opt_state, batch
+                    )
+                loss = float(metrics["loss"])
+                if t.abort_on_nan and not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+            except (RuntimeError, FloatingPointError) as e:
+                failures += 1
+                print(f"[trainer] step {step} failed ({e}); "
+                      f"restoring (failure {failures}/{t.max_failures})")
+                if failures > t.max_failures:
+                    raise
+                self.ckpt.wait()
+                if self.ckpt.latest_step() is not None:
+                    params, opt_state, step = self._restore()
+                else:
+                    params, opt_state = self.init_state()
+                    step = 0
+                batches = sharded_batches(
+                    self.dataset, b_shards, start_index=step, embeds_cfg=self.cfg
+                )
+                continue
+            dt = time.time() - t0
+            slow = self.stats.record(dt, t.straggler_factor)
+            step += 1
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step_time_s"] = dt
+            self.metrics_log.append({"step": step, **m})
+            if on_metrics:
+                on_metrics(step, m)
+            if step % t.log_every == 0 or step == t.steps:
+                print(
+                    f"[trainer] step {step:5d} loss={m['loss']:.4f} "
+                    f"acc={m.get('accuracy', 0):.3f} "
+                    f"gnorm={m.get('grad_norm', 0):.2f} {dt*1e3:.0f}ms"
+                    + (" STRAGGLER" if slow else "")
+                )
+            if step % t.ckpt_every == 0 or step == t.steps or self._preempted:
+                self.ckpt.save_async(step, {"params": params, "opt": opt_state})
+        self.ckpt.wait()
+        if self._preempted:
+            self.ckpt.save(step, {"params": params, "opt": opt_state})
+            print(f"[trainer] preempted; checkpointed step {step}")
+        return {
+            "params": params,
+            "opt_state": opt_state,
+            "step": step,
+            "metrics": self.metrics_log,
+            "stragglers": self.stats.stragglers,
+            "failures": failures,
+        }
+
+    def _restore(self):
+        p_sh, o_sh = self.state_shardings()
+        target = {
+            "params": self.plan.args[0],
+            "opt": self.plan.args[1],
+        }
+        shardings = {"params": p_sh, "opt": o_sh}
+        state, step = self.ckpt.restore(target, shardings=shardings)
+        return state["params"], state["opt"], step
