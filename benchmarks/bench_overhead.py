@@ -2,23 +2,32 @@
 
 Measures (a) pure dispatcher cost — submit+split+version+schedule per task
 with execution stubbed out — and (b) end-to-end wave-batched execution vs
-a hand-written blocked-cholesky jnp loop (no task layer at all).
+a hand-written blocked-cholesky jnp loop (no task layer at all), plus the
+executor launch/compile counters that witness whole-schedule compilation
+(one compiled WaveProgram per repeated schedule; DESIGN.md §2/§5).
+
+Emits ``BENCH_overhead.json`` (machine-readable; tracked PR-over-PR).
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import Dispatcher, GData, GTask, spd_matrix
+from repro.core.executors import clear_compile_cache
 from repro.core.executors.base import Executor
 from repro.linalg import run_cholesky
+from repro.linalg.cholesky import utp_cholesky
 from repro.linalg.ops import POTRF
 from repro.kernels import ref as kref
 
 from .common import row, timeit
+
+JSON_PATH = "BENCH_overhead.json"
 
 
 class NullExecutor(Executor):
@@ -57,19 +66,51 @@ def hand_written_blocked(a: jnp.ndarray, p: int) -> jnp.ndarray:
     return jnp.tril(jnp.concatenate(rows, axis=0))
 
 
+def drain_stats(a: jnp.ndarray, p: int, graph: str = "g2") -> dict:
+    """launches/compiles for a first and a structurally repeated drain."""
+    clear_compile_cache()
+    out = {}
+    for which in ("first_drain", "repeat_drain"):
+        d = Dispatcher(graph=graph)
+        A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
+        utp_cholesky(d, A)
+        n = d.run()
+        out[which] = {
+            "leaf_tasks": n,
+            "launches": int(d.executor.stats.get("launches", 0)),
+            "compiles": int(d.executor.stats.get("compiles", 0)),
+        }
+    return out
+
+
 def main(quick: bool = True) -> None:
+    report = {"bench": "overhead", "backend": jax.default_backend()}
     for nb in (4, 8, 16):
         per_task = dispatcher_only_cost(nb)
         row(f"utp_dispatch_only_p{nb}", per_task, "per_task_overhead")
+        report[f"dispatch_only_us_per_task_p{nb}"] = per_task * 1e6
+
     n, p = 512, 8
     a = spd_matrix(n)
     hand = jax.jit(lambda x: hand_written_blocked(x, p))
-    t_hand = timeit(hand, a)
+    t_hand = timeit(hand, a, warmup=2, iters=7)
     row(f"blocked_handwritten_n{n}_p{p}", t_hand, f"{(n**3/3)/t_hand/1e9:.2f}GF/s")
     t_utp = timeit(lambda: run_cholesky(a, graph="g2", partitions=((p, p),)),
-                   warmup=1, iters=2)
+                   warmup=2, iters=7)
+    ratio = t_utp / t_hand
     row(f"blocked_utp_g2_n{n}_p{p}", t_utp,
-        f"overhead={100*(t_utp-t_hand)/t_hand:+.1f}%")
+        f"overhead={100*(ratio-1):+.1f}%")
+    report.update(
+        n=n, p=p,
+        handwritten_us=t_hand * 1e6,
+        utp_g2_us=t_utp * 1e6,
+        utp_over_handwritten_ratio=ratio,
+        stats=drain_stats(a, p),
+    )
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {JSON_PATH} (ratio={ratio:.3f}x)")
 
 
 if __name__ == "__main__":

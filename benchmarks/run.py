@@ -2,7 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full]
 
-CSV rows: name,us_per_call,derived.
+CSV rows: name,us_per_call,derived.  ``bench_overhead`` additionally writes
+``BENCH_overhead.json`` (machine-readable overhead-parity record, committed
+so the perf trajectory is tracked PR-over-PR; DESIGN.md §5).
 """
 
 from __future__ import annotations

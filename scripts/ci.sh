@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf smoke.  Run from anywhere; cds to the repo root.
+#   scripts/ci.sh          # tests + overhead smoke
+#   scripts/ci.sh --full   # also the full benchmark suite
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== perf smoke: bench_overhead (writes BENCH_overhead.json) =="
+python -m benchmarks.bench_overhead
+
+if [[ "${1:-}" == "--full" ]]; then
+  echo "== full benchmark suite =="
+  python -m benchmarks.run
+fi

@@ -18,10 +18,30 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 _uid = itertools.count()
+
+
+def to_grid(a: jnp.ndarray, br: int, bc: int) -> jnp.ndarray:
+    """(R, C) root layout -> (R//br, C//bc, br, bc) grid-major layout."""
+    r, c = a.shape
+    return a.reshape(r // br, br, c // bc, bc).transpose(0, 2, 1, 3)
+
+
+def from_grid(a4: jnp.ndarray) -> jnp.ndarray:
+    """(nr, nc, br, bc) grid-major layout -> (nr*br, nc*bc) root layout."""
+    nr, nc, br, bc = a4.shape
+    return a4.transpose(0, 2, 1, 3).reshape(nr * br, nc * bc)
+
+
+# jitted epoch-boundary wrappers: one fused XLA call per layout change
+# instead of a reshape+transpose+reshape dispatch chain (hot on repeated
+# drains; the traced executor code uses the plain functions above).
+_to_grid_jit = jax.jit(to_grid, static_argnums=(1, 2))
+_from_grid_jit = jax.jit(from_grid)
 
 
 @dataclass(frozen=True)
@@ -66,6 +86,11 @@ class GData:
         self.shape = tuple(shape)
         self.dtype = dtype
         self.partitions: List[Tuple[int, int]] = [tuple(p) for p in partitions]
+        # Grid-resident epoch state (DESIGN.md §2): while ``_grid`` is set the
+        # authoritative bytes live in (nr, nc, br, bc) grid-major layout and
+        # ``_value`` is stale; reading ``.value`` de-grids lazily.
+        self._grid: Optional[jnp.ndarray] = None
+        self._grid_block: Optional[Tuple[int, int]] = None
         # Copy on ingest: executors may donate (destroy) the root buffer, so
         # GData must own its storage rather than alias a caller's array.
         self.value = None if value is None else jnp.array(value, dtype=dtype)
@@ -79,6 +104,70 @@ class GData:
                     f"partition level {lvl} ({pr}x{pc}) does not evenly divide "
                     f"{self.name} of shape {self.shape}"
                 )
+
+    # -- grid-resident epoch (DESIGN.md §2) ---------------------------------
+    @property
+    def value(self) -> Optional[jnp.ndarray]:
+        """Root-layout array.  Reading from inside a grid epoch de-grids
+        lazily and ends the epoch (the next drain re-enters it)."""
+        if self._grid is not None:
+            self._value = _from_grid_jit(self._grid)
+            self._grid = None
+            self._grid_block = None
+        return self._value
+
+    @value.setter
+    def value(self, v: Optional[jnp.ndarray]) -> None:
+        self._grid = None
+        self._grid_block = None
+        self._value = v
+
+    @property
+    def in_grid_epoch(self) -> bool:
+        return self._grid is not None
+
+    @property
+    def grid_block(self) -> Optional[Tuple[int, int]]:
+        return self._grid_block
+
+    def enter_grid(self, br: int, bc: int) -> jnp.ndarray:
+        """Enter (or stay in) the grid-resident epoch with block ``(br, bc)``.
+
+        Executors call this once per dispatcher drain; repeated drains with
+        the same block shape find the grid already resident and pay zero
+        layout traffic.  A different block shape flushes through ``.value``
+        first (root layout is the common interchange format).
+        """
+        if self.shape[0] % br or self.shape[1] % bc:
+            raise ValueError(
+                f"{self.name}: block ({br},{bc}) does not divide {self.shape}"
+            )
+        if self._grid is not None and self._grid_block == (br, bc):
+            return self._grid
+        v = self.value  # flushes any differently-blocked resident grid
+        if v is None:
+            raise ValueError(f"{self.name}: cannot enter grid epoch, no value")
+        self._grid = _to_grid_jit(jnp.asarray(v, dtype=self.dtype), br, bc)
+        self._grid_block = (br, bc)
+        self._value = None  # grid is now the single authority
+        return self._grid
+
+    @property
+    def grid(self) -> Optional[jnp.ndarray]:
+        """The resident (nr, nc, br, bc) array, or None outside an epoch."""
+        return self._grid
+
+    def set_grid(self, g4: jnp.ndarray) -> None:
+        """Replace the resident grid (executor scatter-back inside an epoch)."""
+        if self._grid_block is None:
+            raise ValueError(f"{self.name}: set_grid outside a grid epoch")
+        br, bc = self._grid_block
+        want = (self.shape[0] // br, self.shape[1] // bc, br, bc)
+        if g4.shape != want:
+            raise ValueError(
+                f"{self.name}: set_grid shape {g4.shape} != resident {want}"
+            )
+        self._grid = g4
 
     # -- partition geometry -------------------------------------------------
     def _level_block_shape(self, level: int) -> Tuple[int, int]:

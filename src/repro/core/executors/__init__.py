@@ -1,14 +1,19 @@
 from .base import Executor, group_wave
 from .inline import InlineExecutor
-from .jit_wave import JitWaveExecutor, PallasExecutor
+from .jit_wave import JitWaveExecutor, PallasExecutor, clear_compile_cache
 from .sharded import ShardExecutor, row_sharding
+from .wave_program import SchedulePlan, build_program, plan_schedule
 
 __all__ = [
     "Executor",
     "InlineExecutor",
     "JitWaveExecutor",
     "PallasExecutor",
+    "SchedulePlan",
     "ShardExecutor",
+    "build_program",
+    "clear_compile_cache",
     "group_wave",
+    "plan_schedule",
     "row_sharding",
 ]

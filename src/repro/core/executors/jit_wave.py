@@ -3,10 +3,17 @@
 SuperGlue runs ready tasks on multicore threads; the TPU-idiomatic
 equivalent batches every wave of independent same-signature tasks into ONE
 vmapped + jitted launch so the MXU sees a single large batched kernel
-instead of many tiny ones (DESIGN.md §2).  Block gather/scatter uses the
-grid-reshape trick — ``(N,N) -> (nb, nb, b, b)`` fancy indexing — which XLA
-fuses into the launch.
+instead of many tiny ones (DESIGN.md §2).
 
+Primary path (``execute_waves``): the dispatcher's whole level schedule is
+compiled into a single XLA program over grid-resident roots by the
+WaveProgram compiler — one Python dispatch per drain, roots stay in
+``(nr, nc, br, bc)`` layout for the epoch, and repeated drains with the
+same schedule structure reuse one compiled program.
+
+Fallback path (``execute_wave``/``_run_group``): per-wave-group jitted
+launches with the grid-reshape gather/scatter, used when the schedule is
+not grid-uniform (mixed block shapes or unaligned regions on one root).
 The jitted group function is cached on the static signature (op, backend,
 root/block shapes & dtypes); block *indices* are traced arguments, so every
 wave of the same kind reuses the compiled program.
@@ -14,32 +21,52 @@ wave of the same kind reuses the compiled program.
 
 from __future__ import annotations
 
-import functools
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..data import GData, from_grid, to_grid
 from ..task import GTask, TaskState
 from .base import Executor, group_wave
+from .wave_program import SchedulePlan, build_program, plan_schedule
 
-
-def _to_grid(a: jnp.ndarray, br: int, bc: int) -> jnp.ndarray:
-    r, c = a.shape
-    return a.reshape(r // br, br, c // bc, bc).transpose(0, 2, 1, 3)
-
-
-def _from_grid(a4: jnp.ndarray) -> jnp.ndarray:
-    nr, nc, br, bc = a4.shape
-    return a4.transpose(0, 2, 1, 3).reshape(nr * br, nc * bc)
-
-
-# process-global compiled-group cache: keys are purely structural (op name,
-# backend, shapes, dtypes, shardings) so every Dispatcher instance reuses the
-# same compiled programs — dispatcher creation must stay O(tasks), not
-# O(compiles) (paper §3 overhead-parity claim).
+# process-global compiled-program cache: keys are purely structural (op
+# names, backend, shapes, dtypes, shardings, schedule structure) so every
+# Dispatcher instance reuses the same compiled programs — dispatcher
+# creation must stay O(tasks), not O(compiles) (paper §3 overhead-parity
+# claim).  Holds both per-group functions ("group", ...) and whole-schedule
+# WavePrograms ("waveprog", ...).
 _GROUP_FN_CACHE: Dict[tuple, callable] = {}
+
+# drain memo (DESIGN.md §2): structural root-task-stream key -> the captured
+# sequence of compiled program executions for a whole dispatcher drain, so a
+# structurally repeated drain skips Python re-splitting/re-versioning and
+# replays the programs directly.  Owned here (not in dispatcher.py) so one
+# clear call drops every compiled artifact.
+_DRAIN_MEMO: Dict[tuple, object] = {}
+
+
+def clear_compile_cache() -> None:
+    """Drop all cached compiled group fns / WavePrograms / drain memos."""
+    _GROUP_FN_CACHE.clear()
+    _DRAIN_MEMO.clear()
+
+
+@dataclass(frozen=True)
+class ProgramRecord:
+    """One compiled-program execution inside a captured drain.
+
+    ``root_slots`` index into the drain's root-argument data order; the
+    dispatcher resolves them to fresh ``GData`` objects on replay."""
+
+    fn: object  # the jitted WaveProgram
+    root_slots: Tuple[int, ...]
+    blocks: Tuple[Tuple[int, int], ...]  # per-root leaf block shape
+    idxs: jnp.ndarray  # flat (total, 2) int32 block indices (device)
+    n_tasks: int
 
 
 class JitWaveExecutor(Executor):
@@ -52,8 +79,115 @@ class JitWaveExecutor(Executor):
         self._fn_cache = _GROUP_FN_CACHE
         # optional: data_id -> jax.sharding.Sharding (set by ShardExecutor)
         self._shardings: Dict[int, object] = {}
+        # drain-capture state (dispatcher memo protocol)
+        self._capture: Optional[List[ProgramRecord]] = None
+        self._capture_ids: Dict[int, int] = {}
+        self._capture_ok = True
 
-    # -- compiled group launch -------------------------------------------------
+    # -- drain capture/replay protocol (DESIGN.md §2) --------------------------
+    def memo_key_extra(self) -> tuple:
+        """Executor-identity part of the dispatcher's drain-memo key."""
+        return (self.name, self.backend, self.donate)
+
+    def begin_capture(self, root_slot_of: Dict[int, int]) -> None:
+        """Start recording program executions; ``root_slot_of`` maps the
+        drain's root-argument data ids to stable slots."""
+        self._capture = []
+        self._capture_ids = dict(root_slot_of)
+        self._capture_ok = True
+
+    def end_capture(self):
+        """Stop recording; returns (records, ok).  ``ok`` is False when any
+        leaf work bypassed the WaveProgram path (legacy fallback) or touched
+        a datum that is not a root argument — such drains are not memoized."""
+        records, ok = self._capture, self._capture_ok
+        self._capture = None
+        self._capture_ids = {}
+        return records or [], ok and bool(records)
+
+    def replay_program(self, rec: ProgramRecord, datas: List[GData]) -> int:
+        """Re-execute a captured program against fresh data handles."""
+        grids, _ = self._enter_grids(datas, rec.blocks)
+        outs = rec.fn(grids, rec.idxs)
+        for data, g in zip(datas, outs):
+            data.set_grid(g)
+        self.stats["tasks"] += rec.n_tasks
+        self.stats["launches"] += 1
+        return rec.n_tasks
+
+    # -- whole-schedule compiled path (DESIGN.md §2) ---------------------------
+    def execute_waves(self, waves: List[List[GTask]]) -> int:
+        waves = [w for w in waves if w]
+        if not waves:
+            return 0
+        self._prepare_roots(waves)
+        plan = plan_schedule(waves)
+        if plan is None:
+            self._capture_ok = False
+            n = 0
+            for wave in waves:
+                n += self.execute_wave(wave)
+            return n
+        return self._run_program(plan)
+
+    def _prepare_roots(self, waves: Sequence[Sequence[GTask]]) -> None:
+        """Hook: place/distribute roots before planning (ShardExecutor)."""
+
+    def _grid_sharding(self, data: GData, br: int, bc: int):
+        """Sharding for ``data``'s resident (nr, nc, br, bc) grid, or None."""
+        return None
+
+    def _enter_grids(self, datas: Sequence[GData], blocks):
+        """Enter grid epochs (resident re-entry is free) and apply grid
+        shardings; returns (grids, shardings)."""
+        grids: List[jnp.ndarray] = []
+        shardings: List[object] = []
+        for data, (br, bc) in zip(datas, blocks):
+            g = data.enter_grid(br, bc)
+            sh = self._grid_sharding(data, br, bc)
+            if sh is not None and getattr(g, "sharding", None) != sh:
+                g = jax.device_put(g, sh)
+                data.set_grid(g)
+            grids.append(g)
+            shardings.append(sh)
+        return tuple(grids), tuple(shardings)
+
+    def _run_program(self, plan: SchedulePlan) -> int:
+        datas = [plan.datas[d] for d in plan.roots_order]
+        grids, shardings = self._enter_grids(datas, plan.blocks)
+        out_shardings = (
+            shardings if all(s is not None for s in shardings) else None
+        )
+        key = (
+            "waveprog",
+            self.memo_key_extra(),
+            tuple(str(s) for s in shardings),
+        ) + plan.key
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            fn = build_program(plan, self.backend, self.donate, out_shardings)
+            self._fn_cache[key] = fn
+            self.stats["compiles"] += 1
+        idxs = plan.flat_idxs()
+        outs = fn(grids, idxs)
+        for data, g in zip(datas, outs):
+            data.set_grid(g)
+        if self._capture is not None:
+            slots = tuple(self._capture_ids.get(d, -1) for d in plan.roots_order)
+            if -1 in slots:
+                self._capture_ok = False  # touches a non-root-arg datum
+            else:
+                self._capture.append(
+                    ProgramRecord(fn, slots, plan.blocks, idxs, len(plan.tasks))
+                )
+        for t in plan.tasks:
+            t.state = TaskState.FINISHED
+            self.stats["tasks"] += 1
+            self._finished(t)
+        self.stats["launches"] += 1
+        return len(plan.tasks)
+
+    # -- per-group fallback path -----------------------------------------------
     def _build_group_fn(
         self,
         op,
@@ -74,7 +208,7 @@ class JitWaveExecutor(Executor):
             blocks = []
             for a, slot in enumerate(slots):
                 br, bc = block_shapes[a]
-                g = _to_grid(roots[slot], br, bc)
+                g = to_grid(roots[slot], br, bc)
                 blocks.append(g[idxs[a][:, 0], idxs[a][:, 1]])
             outs = batched(*blocks)
             if not isinstance(outs, (tuple, list)):
@@ -82,11 +216,11 @@ class JitWaveExecutor(Executor):
             for out, a in zip(outs, write_pos):
                 slot = slots[a]
                 br, bc = block_shapes[a]
-                g = _to_grid(roots[slot], br, bc)
+                g = to_grid(roots[slot], br, bc)
                 g = g.at[idxs[a][:, 0], idxs[a][:, 1]].set(
                     out.astype(root_dtypes[slot])
                 )
-                roots[slot] = _from_grid(g)
+                roots[slot] = from_grid(g)
             return tuple(roots)
 
         jit_kwargs = {}
@@ -98,7 +232,6 @@ class JitWaveExecutor(Executor):
         slot_of = {d: i for i, d in enumerate(roots_order)}
         slots = tuple(slot_of[v.data.id] for v in rep.args)
         block_shapes = tuple(v.region.shape for v in rep.args)
-        root_shapes = tuple(rep.args[0].data.shape for _ in roots_order)
         roots = {v.data.id: v.data for v in rep.args}
         root_shapes = tuple(roots[d].shape for d in roots_order)
         root_dtypes = tuple(roots[d].dtype for d in roots_order)
@@ -106,6 +239,7 @@ class JitWaveExecutor(Executor):
         shardings = tuple(self._shardings.get(d) for d in roots_order)
         out_shardings = shardings if any(s is not None for s in shardings) else None
         key = (
+            "group",
             op.name,
             self.backend,
             self.donate,
@@ -129,7 +263,6 @@ class JitWaveExecutor(Executor):
             self.stats["compiles"] += 1
         return self._fn_cache[key]
 
-    # -- wave execution ----------------------------------------------------------
     def execute_wave(self, wave: List[GTask]) -> int:
         for key, tasks in group_wave(wave).items():
             self._run_group(tasks)
@@ -148,7 +281,8 @@ class JitWaveExecutor(Executor):
         fn = self._group_fn(op, rep, roots_order)
         # pad the batch to a power-of-two bucket so retraces are O(log n)
         # across wave sizes; padding repeats the last task, whose duplicate
-        # scatter writes the identical value (idempotent).
+        # scatter writes the identical value (idempotent: the gather of the
+        # whole batch happens before any scatter in the traced fn).
         n = len(tasks)
         bucket = 1
         while bucket < n:
@@ -174,7 +308,9 @@ class JitWaveExecutor(Executor):
 
 class PallasExecutor(JitWaveExecutor):
     """cuBLAS wrapper analog: identical wave batching, Pallas tile kernels as
-    leaves (interpret=True on CPU; compiled on real TPUs)."""
+    leaves.  Under the WaveProgram path its groups lower to the fused
+    scalar-prefetch grid kernels (gather/compute/scatter in one kernel, no
+    gathered tile stacks in HBM); interpret=True on CPU, compiled on TPUs."""
 
     name = "pallas"
 

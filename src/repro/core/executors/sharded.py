@@ -14,12 +14,13 @@ is checked and falls back to replication per-dim (never fails to place).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..data import GData
+from ..task import GTask
 from .jit_wave import JitWaveExecutor
 
 
@@ -56,10 +57,47 @@ class ShardExecutor(JitWaveExecutor):
         if data.value is not None:
             data.value = jax.device_put(data.value, sh)
 
-    def _run_group(self, tasks):
-        # lazily place any root not yet distributed
-        for t in tasks:
-            for v in t.args:
-                if v.data.id not in self._shardings and v.data.value is not None:
-                    self.place(v.data)
+    def memo_key_extra(self) -> tuple:
+        # axis sizes alone don't identify a mesh: two meshes with the same
+        # ('data', 2) layout over different devices compile different
+        # out_shardings, so device identity must be part of every cache key
+        mesh_desc = (
+            tuple(sorted(self.mesh.shape.items())),
+            tuple(d.id for d in self.mesh.devices.flat),
+        )
+        return super().memo_key_extra() + (mesh_desc, tuple(self.shard_axes))
+
+    def _grid_sharding(self, data: GData, br: int, bc: int):
+        """Shard the resident (nr, nc, br, bc) grid over its *grid* dims.
+
+        The root's row sharding (block rows owned by mesh rows) becomes a
+        sharding of the leading grid dims; block dims stay replicated, so
+        the distributed drain rides the same resident layout as the local
+        one and XLA's SPMD partitioner materializes panel movement as
+        collectives around the compiled WaveProgram.
+        """
+        nr, nc = data.shape[0] // br, data.shape[1] // bc
+        spec = []
+        for dim, ax in zip((nr, nc), self.shard_axes):
+            if ax is None:
+                spec.append(None)
+                continue
+            size = self.mesh.shape[ax]
+            spec.append(ax if dim % size == 0 else None)
+        return NamedSharding(self.mesh, P(*spec, None, None))
+
+    def _prepare_roots(self, waves: Sequence[Sequence[GTask]]) -> None:
+        # lazily place any root not yet distributed (first drain only; the
+        # resident grid keeps its sharding across subsequent drains)
+        for wave in waves:
+            for t in wave:
+                for v in t.args:
+                    d = v.data
+                    if d.id not in self._shardings and (
+                        d.in_grid_epoch or d.value is not None
+                    ):
+                        self.place(d)
+
+    def _run_group(self, tasks: List[GTask]):
+        self._prepare_roots([tasks])
         super()._run_group(tasks)

@@ -1,0 +1,212 @@
+"""WaveProgram: whole-schedule compiled execution (DESIGN.md §2).
+
+The dispatcher hands the leaf executor a complete level schedule — an
+ordered list of waves of independent tasks.  At seed every wave group was a
+separate Python-dispatched ``jit`` call that re-laid the root matrices out
+into grid form and back: O(waves x groups) dispatches and O(N^2) transpose
+traffic per drain.  The WaveProgram compiler instead traces the *entire*
+schedule into ONE jitted XLA program over grid-resident roots:
+
+    plan   = plan_schedule(waves)      # structural key + per-group indices
+    fn     = build_program(plan, ...)  # one traced fn, cached on plan.key
+    grids' = fn(grids, idx_arrays)     # one dispatch per drain
+
+Roots stay in ``(nr, nc, br, bc)`` grid-major layout for the duration (the
+``GData`` grid-resident epoch), so gather/scatter is direct fancy indexing
+with no per-launch reshape/transpose.  Block indices are traced arguments:
+two drains whose schedules share a structure (op sequence, group sizes, arg
+slots, shapes, dtypes) hit the same compiled program — the repeated-drain
+case (training steps, iterative solvers, benchmark sweeps) costs one
+compile total.
+
+Per group the compiler emits either the operation's fused grid kernel
+(``Operation.grid_fused_fn`` — Pallas scalar-prefetch gather/compute/
+scatter with the output aliased to the written grid, so no gathered tile
+stacks materialize in HBM) or the generic gather -> batched leaf -> scatter
+sequence.  Group sizes are exact, never padded: every group is traced
+inline into one program, so pow2 bucketing would buy no compile savings,
+and duplicate trailing indices are unsound for read-write fused kernels.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import GData
+from ..task import GTask
+from .base import group_wave
+
+
+@dataclass(frozen=True)
+class GroupPlan:
+    """One same-signature task group inside a wave (static + index data)."""
+
+    op: object  # Operation
+    arg_slots: Tuple[int, ...]  # per-arg index into the plan's roots order
+    write_pos: Tuple[int, ...]  # arg positions with write access
+    size: int  # exact group size (no padding)
+    idxs: Tuple[np.ndarray, ...]  # per-arg (size, 2) int32 block coords
+
+    @property
+    def sig(self) -> tuple:
+        return (self.op.name, self.arg_slots, self.write_pos, self.size)
+
+
+@dataclass
+class SchedulePlan:
+    """A fully analyzed level schedule, ready to compile/execute."""
+
+    roots_order: Tuple[int, ...]  # data ids, stable by first appearance
+    datas: Dict[int, GData]
+    blocks: Tuple[Tuple[int, int], ...]  # per-slot leaf block shape (br, bc)
+    waves: List[List[GroupPlan]]
+    tasks: List[GTask]  # all tasks in wave order
+    key: tuple  # structural cache key (no data identity)
+
+    def groups(self):
+        for wave in self.waves:
+            yield from wave
+
+    def flat_idxs(self) -> jnp.ndarray:
+        """All block-index rows concatenated into ONE (total, 2) int32 array
+        (a single host->device transfer per drain; the program slices it at
+        static offsets in trace order)."""
+        parts = [ix for g in self.groups() for ix in g.idxs]
+        return jnp.asarray(np.concatenate(parts, axis=0))
+
+
+def plan_schedule(waves: Sequence[Sequence[GTask]]) -> Optional[SchedulePlan]:
+    """Analyze a level schedule for whole-program compilation.
+
+    Returns None (caller falls back to per-wave launches) when the schedule
+    is not grid-uniform: some root lacks a value, or a task's region is not
+    one aligned block of that root's uniform leaf grid.
+    """
+    roots_order: List[int] = []
+    datas: Dict[int, GData] = {}
+    blocks: Dict[int, Tuple[int, int]] = {}
+    tasks: List[GTask] = []
+    for wave in waves:
+        for t in wave:
+            tasks.append(t)
+            for v in t.args:
+                d = v.data
+                if d.id not in datas:
+                    if not d.in_grid_epoch and d._value is None:
+                        return None
+                    roots_order.append(d.id)
+                    datas[d.id] = d
+                    blocks[d.id] = v.region.shape
+                br, bc = blocks[d.id]
+                r = v.region
+                if (
+                    r.shape != (br, bc)
+                    or r.r0 % br
+                    or r.c0 % bc
+                    or d.shape[0] % br
+                    or d.shape[1] % bc
+                ):
+                    return None
+    if not tasks:
+        return None
+    slot_of = {d: i for i, d in enumerate(roots_order)}
+
+    plan_waves: List[List[GroupPlan]] = []
+    for wave in waves:
+        groups: List[GroupPlan] = []
+        for _, group_tasks in group_wave(wave).items():
+            rep = group_tasks[0]
+            arg_slots = tuple(slot_of[v.data.id] for v in rep.args)
+            write_pos = tuple(i for i, m in enumerate(rep.modes) if m.writes)
+            idxs = tuple(
+                np.array(
+                    [t.args[a].block_index() for t in group_tasks],
+                    dtype=np.int32,
+                )
+                for a in range(len(rep.args))
+            )
+            groups.append(
+                GroupPlan(rep.op, arg_slots, write_pos, len(group_tasks), idxs)
+            )
+        plan_waves.append(groups)
+
+    roots = tuple(roots_order)
+    blocks_t = tuple(blocks[d] for d in roots)
+    key = (
+        tuple(
+            (datas[d].shape, str(jnp.dtype(datas[d].dtype)), blocks[d])
+            for d in roots
+        ),
+        tuple(tuple(g.sig for g in wave) for wave in plan_waves),
+    )
+    return SchedulePlan(roots, datas, blocks_t, plan_waves, tasks, key)
+
+
+def build_program(
+    plan: SchedulePlan,
+    backend: str,
+    donate: bool,
+    out_shardings=None,
+):
+    """Trace ``plan`` into one jitted fn: (grids, idx_arrays) -> grids'."""
+    dtypes = tuple(plan.datas[d].dtype for d in plan.roots_order)
+
+    # copy only the static fields out of each GroupPlan: the closure (and
+    # thus the process-global program cache) must not retain the per-task
+    # numpy index arrays, which reach the program as a traced argument
+    steps = []
+    for g in plan.groups():
+        fused = g.op.grid_fused_fn(backend)
+        if fused is not None and g.write_pos == (fused[1],):
+            kind, fn = "fused", fused[0]
+        else:
+            kind = "gather"
+            fn = (
+                g.op.batched_leaf_fn(backend)
+                if hasattr(g.op, "batched_leaf_fn")
+                else jax.vmap(g.op.leaf_fn(backend))
+            )
+        steps.append((kind, fn, g.arg_slots, g.write_pos, g.size))
+
+    def program(grids: Tuple[jnp.ndarray, ...], idxs: jnp.ndarray):
+        grids = list(grids)
+        cur = 0
+        for kind, fn, arg_slots, write_pos, size in steps:
+            # static-offset slices of the single flat index array (trace
+            # order matches SchedulePlan.flat_idxs)
+            gidx = []
+            for _ in arg_slots:
+                gidx.append(idxs[cur : cur + size])
+                cur += size
+            if kind == "fused":
+                wslot = arg_slots[write_pos[0]]
+                grids[wslot] = fn(
+                    gidx, tuple(grids[s] for s in arg_slots)
+                )
+            else:
+                blocks = [
+                    grids[s][ix[:, 0], ix[:, 1]]
+                    for s, ix in zip(arg_slots, gidx)
+                ]
+                outs = fn(*blocks)
+                if not isinstance(outs, (tuple, list)):
+                    outs = (outs,)
+                for out, a in zip(outs, write_pos):
+                    s = arg_slots[a]
+                    ix = gidx[a]
+                    grids[s] = grids[s].at[ix[:, 0], ix[:, 1]].set(
+                        out.astype(dtypes[s])
+                    )
+        return tuple(grids)
+
+    jit_kwargs = {}
+    if out_shardings is not None:
+        jit_kwargs["out_shardings"] = out_shardings
+    return jax.jit(
+        program, donate_argnums=(0,) if donate else (), **jit_kwargs
+    )

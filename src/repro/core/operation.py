@@ -22,6 +22,14 @@ from .task import Access, GTask
 class Operation:
     name: str = "op"
 
+    # Drain-memo contract (DESIGN.md §2): True asserts that ``split`` is a
+    # pure function of the task's operation + argument *geometry* (regions,
+    # levels, partitions) — never of data values or external state — so a
+    # structurally repeated drain may replay the captured schedule.  Ops
+    # with value-dependent expansion (e.g. adaptive factorizations) must
+    # set this False to keep every drain through them unmemoized.
+    memoizable: bool = True
+
     def default_modes(self, n_args: int) -> Sequence[Access]:
         """Override for op-specific access intents."""
         return [Access.READWRITE] * n_args
@@ -32,7 +40,10 @@ class Operation:
         return all(v.level + 1 < v.data.n_levels for v in task.args)
 
     def split(self, task: GTask, submit: Callable[[GTask], None]) -> None:
-        """Create child tasks on partitions of ``task``'s args (paper Fig 2b)."""
+        """Create child tasks on partitions of ``task``'s args (paper Fig 2b).
+
+        Must be a pure function of the args' geometry when ``memoizable``
+        is left True — see the class attribute above."""
         raise NotImplementedError(f"{self.name} cannot split")
 
     # -- leaf execution ---------------------------------------------------------
@@ -42,6 +53,17 @@ class Operation:
         ``backend`` is one of {'jnp', 'pallas'}.
         """
         raise NotImplementedError(self.name)
+
+    def grid_fused_fn(self, backend: str):
+        """Optional fused gather/compute/scatter kernel over resident grids.
+
+        Returns ``(call, write_arg)`` where ``call(idxs, grids)`` consumes
+        scalar-prefetched ``(n, 2)`` block-index arrays plus one grid per
+        argument and returns the updated grid of ``write_arg`` — or ``None``
+        when the backend has no fused path (the WaveProgram compiler then
+        falls back to gather -> batched leaf -> scatter; DESIGN.md §2).
+        """
+        return None
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"Operation({self.name})"

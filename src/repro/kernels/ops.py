@@ -15,11 +15,16 @@ import jax.numpy as jnp
 from . import tile_linalg
 from .flash_attention import flash_attention
 from .tile_linalg import (
+    GRID_FUSED,
     batched_gemm,
     batched_potrf,
     batched_syrk,
     batched_trsm,
     default_interpret,
+    grid_gemm,
+    grid_potrf,
+    grid_syrk,
+    grid_trsm,
     matmul,
 )
 
@@ -45,6 +50,11 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, interpret=None) -> jnp.
 
 
 __all__ = [
+    "GRID_FUSED",
+    "grid_gemm",
+    "grid_potrf",
+    "grid_syrk",
+    "grid_trsm",
     "batched_gemm",
     "batched_potrf",
     "batched_syrk",

@@ -38,10 +38,11 @@ def _tile_spec(b: int):
 
 
 # --------------------------------------------------------------------------
-# POTRF: batched lower Cholesky of (n, b, b) tiles
+# Tile bodies — pure (b, b) math shared by the batched per-tile kernels and
+# the fused grid kernels below.
 # --------------------------------------------------------------------------
-def _potrf_kernel(a_ref, l_ref):
-    a = a_ref[...][0].astype(jnp.float32)
+def _potrf_tile(a: jnp.ndarray) -> jnp.ndarray:
+    a = a.astype(jnp.float32)
     b = a.shape[-1]
     idx = jnp.arange(b)
 
@@ -54,7 +55,40 @@ def _potrf_kernel(a_ref, l_ref):
         col = col.at[j].set(djj)
         return L.at[:, j].set(col)
 
-    L = lax.fori_loop(0, b, body, jnp.zeros_like(a))
+    return lax.fori_loop(0, b, body, jnp.zeros_like(a))
+
+
+def _trsm_tile(L: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    L = L.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    nb = L.shape[-1]
+
+    def body(j, X):
+        # (X L^T)[:, j] = sum_{k<=j} X[:,k] L[j,k]; cols >= j of X still zero
+        s = X @ L[j]
+        col = (B[:, j] - s) / L[j, j]
+        return X.at[:, j].set(col)
+
+    return lax.fori_loop(0, nb, body, jnp.zeros_like(B))
+
+
+def _syrk_tile(a: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    return c.astype(jnp.float32) - jnp.dot(
+        a, a.T, preferred_element_type=jnp.float32
+    )
+
+
+def _gemm_tile(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    return c.astype(jnp.float32) - jnp.dot(
+        a, b.T, preferred_element_type=jnp.float32
+    )
+
+
+# --------------------------------------------------------------------------
+# POTRF: batched lower Cholesky of (n, b, b) tiles
+# --------------------------------------------------------------------------
+def _potrf_kernel(a_ref, l_ref):
+    L = _potrf_tile(a_ref[...][0])
     l_ref[...] = L[None].astype(l_ref.dtype)
 
 
@@ -74,17 +108,7 @@ def batched_potrf(a: jnp.ndarray, *, interpret: Optional[bool] = None) -> jnp.nd
 # TRSM: batched X = B @ inv(L)^T  (right, lower-triangular, transposed)
 # --------------------------------------------------------------------------
 def _trsm_kernel(l_ref, b_ref, x_ref):
-    L = l_ref[...][0].astype(jnp.float32)
-    B = b_ref[...][0].astype(jnp.float32)
-    nb = L.shape[-1]
-
-    def body(j, X):
-        # (X L^T)[:, j] = sum_{k<=j} X[:,k] L[j,k]; cols >= j of X still zero
-        s = X @ L[j]
-        col = (B[:, j] - s) / L[j, j]
-        return X.at[:, j].set(col)
-
-    X = lax.fori_loop(0, nb, body, jnp.zeros_like(B))
+    X = _trsm_tile(l_ref[...][0], b_ref[...][0])
     x_ref[...] = X[None].astype(x_ref.dtype)
 
 
@@ -106,9 +130,7 @@ def batched_trsm(
 # SYRK: batched C - A @ A^T   /   GEMM: batched C - A @ B^T  (MXU matmuls)
 # --------------------------------------------------------------------------
 def _syrk_kernel(a_ref, c_ref, o_ref):
-    a = a_ref[...][0]
-    c = c_ref[...][0].astype(jnp.float32)
-    upd = c - jnp.dot(a, a.T, preferred_element_type=jnp.float32)
+    upd = _syrk_tile(a_ref[...][0], c_ref[...][0])
     o_ref[...] = upd[None].astype(o_ref.dtype)
 
 
@@ -127,10 +149,7 @@ def batched_syrk(
 
 
 def _gemm_kernel(a_ref, b_ref, c_ref, o_ref):
-    a = a_ref[...][0]
-    b = b_ref[...][0]
-    c = c_ref[...][0].astype(jnp.float32)
-    upd = c - jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    upd = _gemm_tile(a_ref[...][0], b_ref[...][0], c_ref[...][0])
     o_ref[...] = upd[None].astype(o_ref.dtype)
 
 
@@ -146,6 +165,84 @@ def batched_gemm(
         out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
         interpret=_resolve(interpret),
     )(a, b, c)
+
+
+# --------------------------------------------------------------------------
+# Fused grid kernels (DESIGN.md §2, grid-resident epoch).
+#
+# Gather -> compute -> scatter in ONE kernel over the resident
+# ``(nr, nc, br, bc)`` grid: per-task block coordinates arrive as
+# scalar-prefetched ``(n, 2)`` int32 arrays, the BlockSpec index maps DMA the
+# addressed blocks straight from the grid into VMEM, and the output aliases
+# the written arg's grid so the scatter is in place — no gathered tile
+# stacks ever materialize in HBM.  Callers must pass exact (unpadded) group
+# sizes: tasks in a group are independent, so distinct write blocks are
+# guaranteed, but duplicated trailing indices would re-read their own
+# scatter for read-write operations.
+# --------------------------------------------------------------------------
+def make_grid_fused(tile_fn, arity: int, write_arg: int):
+    """Build a fused gather/compute/scatter entry point for ``tile_fn``.
+
+    ``tile_fn(*tiles) -> tile`` is the pure per-tile body; ``write_arg`` is
+    the argument whose grid receives the result (and whose blocks the output
+    aliases).  Returns ``call(idxs, grids, *, interpret=None) -> new grid``.
+    """
+
+    def kernel(*refs):
+        in_refs = refs[arity : 2 * arity]
+        o_ref = refs[2 * arity]
+        out = tile_fn(*(r[0, 0] for r in in_refs))
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+    def _imap(a: int):
+        def imap(i, *idx_refs):
+            r = idx_refs[a]
+            return (r[i, 0], r[i, 1], 0, 0)
+
+        return imap
+
+    def call(idxs, grids, *, interpret: Optional[bool] = None):
+        assert len(idxs) == arity and len(grids) == arity
+        n = idxs[0].shape[0]
+        from jax.experimental.pallas import tpu as pltpu
+
+        in_specs = [
+            pl.BlockSpec((1, 1) + grids[a].shape[2:], _imap(a))
+            for a in range(arity)
+        ]
+        spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=arity,
+            grid=(n,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (1, 1) + grids[write_arg].shape[2:], _imap(write_arg)
+            ),
+        )
+        wg = grids[write_arg]
+        return pl.pallas_call(
+            kernel,
+            grid_spec=spec,
+            out_shape=jax.ShapeDtypeStruct(wg.shape, wg.dtype),
+            input_output_aliases={arity + write_arg: 0},
+            interpret=_resolve(interpret),
+        )(*idxs, *grids)
+
+    return call
+
+
+grid_potrf = make_grid_fused(_potrf_tile, arity=1, write_arg=0)
+grid_trsm = make_grid_fused(_trsm_tile, arity=2, write_arg=1)
+grid_syrk = make_grid_fused(_syrk_tile, arity=2, write_arg=1)
+grid_gemm = make_grid_fused(_gemm_tile, arity=3, write_arg=2)
+
+# op name -> (fused call, write_arg); consumed by the WaveProgram compiler
+# when the backend is 'pallas' and the group writes exactly that argument.
+GRID_FUSED = {
+    "potrf": (grid_potrf, 0),
+    "trsm": (grid_trsm, 1),
+    "syrk": (grid_syrk, 1),
+    "gemm": (grid_gemm, 2),
+}
 
 
 # --------------------------------------------------------------------------

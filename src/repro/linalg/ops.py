@@ -42,6 +42,9 @@ class PotrfOp(Operation):
             return kops.batched_potrf
         return jax.vmap(self.leaf_fn(backend))
 
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
+
     def split(self, task: GTask, submit) -> None:
         # Paper Fig. 2(b): left-looking blocked Cholesky on A's next level.
         A = task.args[0]
@@ -72,6 +75,9 @@ class TrsmOp(Operation):
             return kops.batched_trsm
         return jax.vmap(self.leaf_fn(backend))
 
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
+
     def split(self, task: GTask, submit) -> None:
         # X L^T = B blocked: X(p,i) = (B(p,i) - sum_{k<i} X(p,k) L(i,k)^T) L(i,i)^-T
         L, B = task.args
@@ -99,6 +105,9 @@ class SyrkOp(Operation):
         if backend == "pallas":
             return kops.batched_syrk
         return jax.vmap(self.leaf_fn(backend))
+
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
 
     def split(self, task: GTask, submit) -> None:
         # C -= A A^T blocked over C's grid; diagonal uses SYRK, rest GEMM.
@@ -129,6 +138,9 @@ class GemmOp(Operation):
         if backend == "pallas":
             return kops.batched_gemm
         return jax.vmap(self.leaf_fn(backend))
+
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
 
     def split(self, task: GTask, submit) -> None:
         # C -= A B^T blocked

@@ -9,6 +9,8 @@ sequential program order semantics when executed.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Access, DepTracker, GData, GTask, Operation
