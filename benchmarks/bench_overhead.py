@@ -17,11 +17,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import Dispatcher, GData, GTask, spd_matrix
+from repro.core import Dispatcher, GData, GTask, dd_matrix, spd_matrix
 from repro.core.executors import clear_compile_cache
 from repro.core.executors.base import Executor
-from repro.linalg import run_cholesky
+from repro.linalg import run_cholesky, run_lu
 from repro.linalg.cholesky import utp_cholesky
+from repro.linalg.lu import utp_getrf
 from repro.linalg.ops import POTRF
 from repro.kernels import ref as kref
 
@@ -66,14 +67,31 @@ def hand_written_blocked(a: jnp.ndarray, p: int) -> jnp.ndarray:
     return jnp.tril(jnp.concatenate(rows, axis=0))
 
 
-def drain_stats(a: jnp.ndarray, p: int, graph: str = "g2") -> dict:
+def hand_written_blocked_lu(a: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Reference: blocked right-looking LU with zero task-layer involvement."""
+    n = a.shape[0] // p
+    A = [[a[i * n:(i + 1) * n, j * n:(j + 1) * n] for j in range(p)] for i in range(p)]
+    for k in range(p):
+        A[k][k] = kref.getrf(A[k][k])
+        for j in range(k + 1, p):
+            A[k][j] = kref.trsml(A[k][k], A[k][j])
+        for i in range(k + 1, p):
+            A[i][k] = kref.trsmu(A[k][k], A[i][k])
+        for i in range(k + 1, p):
+            for j in range(k + 1, p):
+                A[i][j] = kref.gemmnn(A[i][k], A[k][j], A[i][j])
+    rows = [jnp.concatenate(r, axis=1) for r in A]
+    return jnp.concatenate(rows, axis=0)
+
+
+def drain_stats(a: jnp.ndarray, p: int, graph: str = "g2", submit=utp_cholesky) -> dict:
     """launches/compiles for a first and a structurally repeated drain."""
     clear_compile_cache()
     out = {}
     for which in ("first_drain", "repeat_drain"):
         d = Dispatcher(graph=graph)
         A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
-        utp_cholesky(d, A)
+        submit(d, A)
         n = d.run()
         out[which] = {
             "leaf_tasks": n,
@@ -106,6 +124,24 @@ def main(quick: bool = True) -> None:
         utp_g2_us=t_utp * 1e6,
         utp_over_handwritten_ratio=ratio,
         stats=drain_stats(a, p),
+    )
+
+    # LU through the same dispatcher/executors (operation-algebra parity)
+    a_lu = dd_matrix(n)
+    hand_lu = jax.jit(lambda x: hand_written_blocked_lu(x, p))
+    t_hand_lu = timeit(hand_lu, a_lu, warmup=2, iters=7)
+    row(f"blocked_lu_handwritten_n{n}_p{p}", t_hand_lu,
+        f"{(2*n**3/3)/t_hand_lu/1e9:.2f}GF/s")
+    t_utp_lu = timeit(lambda: run_lu(a_lu, graph="g2", partitions=((p, p),)),
+                      warmup=2, iters=7)
+    ratio_lu = t_utp_lu / t_hand_lu
+    row(f"blocked_lu_utp_g2_n{n}_p{p}", t_utp_lu,
+        f"overhead={100*(ratio_lu-1):+.1f}%")
+    report.update(
+        lu_handwritten_us=t_hand_lu * 1e6,
+        lu_utp_g2_us=t_utp_lu * 1e6,
+        lu_utp_over_handwritten_ratio=ratio_lu,
+        lu_stats=drain_stats(a_lu, p, submit=utp_getrf),
     )
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

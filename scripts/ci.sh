@@ -8,7 +8,8 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1: pytest =="
-python -m pytest -x -q
+# no -x: report every failure; set -e still fails the gate on any red test
+python -m pytest -q
 
 echo "== perf smoke: bench_overhead (writes BENCH_overhead.json) =="
 python -m benchmarks.bench_overhead

@@ -1,0 +1,36 @@
+"""Version-compatibility shims over moving JAX APIs.
+
+One shared helper per API break so call sites never branch on jax versions
+themselves.  Currently: ``shard_map``, which graduated from
+``jax.experimental.shard_map.shard_map`` (kwarg ``check_rep``) to the top
+level ``jax.shard_map`` (kwarg ``check_vma``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX, experimental fallback on old.
+
+    ``check_vma`` is the new-API name for replication/varying-manual-axes
+    checking; it maps onto the old API's ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=check_vma,
+    )

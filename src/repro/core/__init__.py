@@ -6,7 +6,7 @@ task-flow graph configuration (G1-G4 analogs).
 """
 
 from .api import dispatcher, utp_finalize, utp_get_parameters, utp_initialize
-from .data import GData, GView, Region, spd_matrix
+from .data import GData, GView, Region, dd_matrix, spd_matrix
 from .dispatcher import Dispatcher
 from .graph import GRAPHS, TaskFlowGraph, get_graph
 from .operation import Operation, OpRegistry
@@ -26,6 +26,7 @@ __all__ = [
     "Region",
     "TaskFlowGraph",
     "TaskState",
+    "dd_matrix",
     "dispatcher",
     "get_graph",
     "spd_matrix",

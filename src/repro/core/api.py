@@ -35,9 +35,27 @@ def utp_finalize() -> int:
 def utp_get_parameters(
     argv: Optional[List[str]] = None, defaults: Tuple[int, int, int] = (1024, 4, 4)
 ) -> Tuple[int, int, int]:
-    """(N, b1, b2) from the command line, as in paper Fig. 2a line 10."""
+    """(N, b1, b2) from the command line, as in paper Fig. 2a line 10.
+
+    Raises ``ValueError`` for non-positive values: a negative or zero matrix
+    size / partition count would silently produce empty or inverted block
+    grids downstream (``"-4".lstrip("-").isdigit()`` is True, so these used
+    to parse "successfully").
+    """
     argv = sys.argv[1:] if argv is None else argv
-    vals = [int(a) for a in argv[:3] if a.lstrip("-").isdigit()]
+    names = ("N", "b1", "b2")
+    vals = []
+    for a in argv[:3]:
+        # one optional sign, then digits; anything else is a non-int flag
+        if not (a[1:] if a[:1] in "+-" else a).isdigit():
+            continue
+        v = int(a)
+        if v <= 0:
+            raise ValueError(
+                f"utp_get_parameters: {names[len(vals)]}={v} must be a "
+                "positive integer"
+            )
+        vals.append(v)
     n = vals[0] if len(vals) > 0 else defaults[0]
     b1 = vals[1] if len(vals) > 1 else defaults[1]
     b2 = vals[2] if len(vals) > 2 else defaults[2]

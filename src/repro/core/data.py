@@ -277,3 +277,19 @@ def spd_matrix(n: int, dtype=jnp.float32, seed: int = 0) -> jnp.ndarray:
     a = rng.standard_normal((n, n)).astype(np.float32) / np.sqrt(n)
     a = a @ a.T + np.eye(n, dtype=np.float32) * 2.0
     return jnp.asarray(a, dtype=dtype)
+
+
+def dd_matrix(n: int, dtype=jnp.float32, seed: int = 0) -> jnp.ndarray:
+    """Random strictly column-diagonally-dominant matrix.
+
+    Such matrices admit LU without pivoting, and partial pivoting provably
+    selects the diagonal at every step (the Schur complement stays column-
+    dominant), so ``jax.scipy.linalg.lu`` returns P == I — making pivoted
+    library factors directly comparable to pivot-free task-layer ones.
+    """
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a /= np.abs(a).sum(axis=0, keepdims=True) * 1.5  # col |off-diag| sum < 2/3
+    diag = 1.0 + rng.uniform(0.0, 1.0, n).astype(np.float32)
+    np.fill_diagonal(a, diag)
+    return jnp.asarray(a, dtype=dtype)

@@ -199,9 +199,7 @@ class JitWaveExecutor(Executor):
         out_shardings,
     ):
         backend = self.backend
-        batched = op.batched_leaf_fn(backend) if hasattr(
-            op, "batched_leaf_fn"
-        ) else jax.vmap(op.leaf_fn(backend))
+        batched = op.batched_leaf_fn(backend)
 
         def fn(roots: Tuple[jnp.ndarray, ...], idxs: Tuple[jnp.ndarray, ...]):
             roots = list(roots)

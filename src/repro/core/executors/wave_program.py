@@ -166,11 +166,7 @@ def build_program(
             kind, fn = "fused", fused[0]
         else:
             kind = "gather"
-            fn = (
-                g.op.batched_leaf_fn(backend)
-                if hasattr(g.op, "batched_leaf_fn")
-                else jax.vmap(g.op.leaf_fn(backend))
-            )
+            fn = g.op.batched_leaf_fn(backend)
         steps.append((kind, fn, g.arg_slots, g.write_pos, g.size))
 
     def program(grids: Tuple[jnp.ndarray, ...], idxs: jnp.ndarray):

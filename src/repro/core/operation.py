@@ -16,6 +16,8 @@ from __future__ import annotations
 
 from typing import Callable, List, Sequence
 
+import jax
+
 from .task import Access, GTask
 
 
@@ -54,6 +56,15 @@ class Operation:
         """
         raise NotImplementedError(self.name)
 
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        """Batched leaf over stacked blocks ``(n, *block_shape)`` per arg.
+
+        Default: ``vmap`` of ``leaf_fn`` — every Operation rides the wave
+        executors with no extra code.  Override to launch a natively batched
+        kernel instead (e.g. one Pallas grid over the whole stack).
+        """
+        return jax.vmap(self.leaf_fn(backend))
+
     def grid_fused_fn(self, backend: str):
         """Optional fused gather/compute/scatter kernel over resident grids.
 
@@ -76,6 +87,17 @@ class OpRegistry:
 
     @classmethod
     def register(cls, op: Operation) -> Operation:
+        """Register a singleton; names are unique across the process.
+
+        A silent overwrite would split the algebra in two — tasks created
+        with the old singleton and configs resolving the new one would no
+        longer group/batch together — so a colliding name is an error.
+        """
+        prev = cls._ops.get(op.name)
+        if prev is not None and prev is not op:
+            raise ValueError(
+                f"operation name {op.name!r} already registered by {prev!r}"
+            )
         cls._ops[op.name] = op
         return op
 

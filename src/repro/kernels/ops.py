@@ -17,14 +17,22 @@ from .flash_attention import flash_attention
 from .tile_linalg import (
     GRID_FUSED,
     batched_gemm,
+    batched_gemmnn,
+    batched_getrf,
     batched_potrf,
     batched_syrk,
     batched_trsm,
+    batched_trsml,
+    batched_trsmu,
     default_interpret,
     grid_gemm,
+    grid_gemmnn,
+    grid_getrf,
     grid_potrf,
     grid_syrk,
     grid_trsm,
+    grid_trsml,
+    grid_trsmu,
     matmul,
 )
 
@@ -49,21 +57,55 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, interpret=None) -> jnp.
     return batched_gemm(a[None], b[None], c[None], interpret=interpret)[0]
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def getrf(a: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    return batched_getrf(a[None], interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trsml(l: jnp.ndarray, b: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    return batched_trsml(l[None], b[None], interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trsmu(u: jnp.ndarray, b: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    return batched_trsmu(u[None], b[None], interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gemmnn(
+    a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, interpret=None
+) -> jnp.ndarray:
+    return batched_gemmnn(a[None], b[None], c[None], interpret=interpret)[0]
+
+
 __all__ = [
     "GRID_FUSED",
     "grid_gemm",
+    "grid_gemmnn",
+    "grid_getrf",
     "grid_potrf",
     "grid_syrk",
     "grid_trsm",
+    "grid_trsml",
+    "grid_trsmu",
     "batched_gemm",
+    "batched_gemmnn",
+    "batched_getrf",
     "batched_potrf",
     "batched_syrk",
     "batched_trsm",
+    "batched_trsml",
+    "batched_trsmu",
     "default_interpret",
     "flash_attention",
     "gemm",
+    "gemmnn",
+    "getrf",
     "matmul",
     "potrf",
     "syrk",
     "trsm",
+    "trsml",
+    "trsmu",
 ]

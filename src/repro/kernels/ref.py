@@ -5,7 +5,14 @@ Conventions match the blocked left-looking Cholesky (paper Fig. 2b):
     trsm(l, b)    -> b @ inv(l)^T         (right, lower, transposed)
     syrk(a, c)    -> c - a @ a^T
     gemm(a, b, c) -> c - a @ b^T
-All oracles compute in float32 and cast back to the input dtype.
+and the blocked right-looking pivot-free LU (DESIGN.md §6):
+    getrf(a)        -> packed L\\U factors (L unit-lower implicit, U upper)
+    trsml(l, b)     -> inv(tril(l, unit)) @ b   (left, lower, unit-diagonal)
+    trsmu(u, b)     -> b @ inv(triu(u))         (right, upper, non-unit)
+    gemmnn(a, b, c) -> c - a @ b
+All oracles compute in float32 and cast back to the input dtype.  The
+triangular-solve oracles read only their own triangle (plus U's diagonal),
+so packed L\\U blocks can be passed without masking.
 """
 
 from __future__ import annotations
@@ -34,6 +41,34 @@ def syrk(a: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
 
 def gemm(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     return (_f32(c) - _f32(a) @ _f32(b).T).astype(c.dtype)
+
+
+def getrf(a: jnp.ndarray) -> jnp.ndarray:
+    """Pivot-free right-looking LU; returns L\\U packed into one matrix.
+
+    Delegates to the shared pure-jnp tile body (``_getrf_tile`` uses no
+    Pallas primitives): pivot-free LU has exactly one defined recurrence,
+    so a re-implementation here could only diverge from it.  Independent
+    coverage comes from ``jax.scipy.linalg.lu`` comparisons in test_lu.py.
+    """
+    from .tile_linalg import _getrf_tile
+
+    return _getrf_tile(_f32(a)).astype(a.dtype)
+
+
+def trsml(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    x = solve_triangular(_f32(l), _f32(b), lower=True, unit_diagonal=True)
+    return x.astype(b.dtype)
+
+
+def trsmu(u: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    # x @ u = b  <=>  u^T x^T = b^T (solve_triangular reads triu(u) only)
+    x = solve_triangular(_f32(u), _f32(b).T, lower=False, trans="T")
+    return x.T.astype(b.dtype)
+
+
+def gemmnn(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    return (_f32(c) - _f32(a) @ _f32(b)).astype(c.dtype)
 
 
 def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

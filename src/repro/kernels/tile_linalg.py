@@ -72,6 +72,67 @@ def _trsm_tile(L: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     return lax.fori_loop(0, nb, body, jnp.zeros_like(B))
 
 
+def _getrf_tile(a: jnp.ndarray) -> jnp.ndarray:
+    """Pivot-free right-looking LU of one tile; L\\U packed (unit L implicit).
+
+    Column recurrence on the VPU: scale column k below the pivot, then one
+    masked rank-1 update of the trailing submatrix — O(b) steps, mirroring
+    ``_potrf_tile``.
+    """
+    a = a.astype(jnp.float32)
+    b = a.shape[-1]
+    idx = jnp.arange(b)
+
+    def body(k, m):
+        col = jnp.where(idx > k, m[:, k] / m[k, k], m[:, k])
+        m = m.at[:, k].set(col)
+        l = jnp.where(idx > k, col, 0.0)
+        u = jnp.where(idx > k, m[k, :], 0.0)
+        return m - l[:, None] * u[None, :]
+
+    return lax.fori_loop(0, b, body, a)
+
+
+def _trsml_tile(L: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """X = inv(L) @ B with L unit-lower (stored diagonal/upper ignored).
+
+    Row recurrence: X[i] = B[i] - L[i] @ X.  Rows >= i of X are still zero,
+    so the packed block's diagonal and upper junk multiply zeros — no
+    masking needed (same trick as ``_trsm_tile``).
+    """
+    L = L.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    nb = L.shape[-1]
+
+    def body(i, X):
+        return X.at[i].set(B[i] - L[i] @ X)
+
+    return lax.fori_loop(0, nb, body, jnp.zeros_like(B))
+
+
+def _trsmu_tile(U: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """X = B @ inv(U) with U upper non-unit (stored lower junk ignored).
+
+    Column recurrence: X[:, j] = (B[:, j] - X @ U[:, j]) / U[j, j]; columns
+    >= j of X are still zero, masking U's sub-diagonal content.
+    """
+    U = U.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    nb = U.shape[-1]
+
+    def body(j, X):
+        s = X @ U[:, j]
+        return X.at[:, j].set((B[:, j] - s) / U[j, j])
+
+    return lax.fori_loop(0, nb, body, jnp.zeros_like(B))
+
+
+def _gemmnn_tile(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    return c.astype(jnp.float32) - jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    )
+
+
 def _syrk_tile(a: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     return c.astype(jnp.float32) - jnp.dot(
         a, a.T, preferred_element_type=jnp.float32
@@ -168,6 +229,84 @@ def batched_gemm(
 
 
 # --------------------------------------------------------------------------
+# GETRF: batched pivot-free LU  /  TRSML: batched inv(L) @ B (left, unit-
+# lower)  /  TRSMU: batched B @ inv(U) (right, upper)  /  GEMMNN: batched
+# C - A @ B — the LU operation family (DESIGN.md §6)
+# --------------------------------------------------------------------------
+def _getrf_kernel(a_ref, o_ref):
+    o_ref[...] = _getrf_tile(a_ref[...][0])[None].astype(o_ref.dtype)
+
+
+def batched_getrf(a: jnp.ndarray, *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    n, b, _ = a.shape
+    return pl.pallas_call(
+        _getrf_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(b)],
+        out_specs=_tile_spec(b),
+        out_shape=jax.ShapeDtypeStruct((n, b, b), a.dtype),
+        interpret=_resolve(interpret),
+    )(a)
+
+
+def _trsml_kernel(l_ref, b_ref, x_ref):
+    X = _trsml_tile(l_ref[...][0], b_ref[...][0])
+    x_ref[...] = X[None].astype(x_ref.dtype)
+
+
+def batched_trsml(
+    l: jnp.ndarray, b: jnp.ndarray, *, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    n, nb, _ = l.shape
+    return pl.pallas_call(
+        _trsml_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(nb), _tile_spec(nb)],
+        out_specs=_tile_spec(nb),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=_resolve(interpret),
+    )(l, b)
+
+
+def _trsmu_kernel(u_ref, b_ref, x_ref):
+    X = _trsmu_tile(u_ref[...][0], b_ref[...][0])
+    x_ref[...] = X[None].astype(x_ref.dtype)
+
+
+def batched_trsmu(
+    u: jnp.ndarray, b: jnp.ndarray, *, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    n, nb, _ = u.shape
+    return pl.pallas_call(
+        _trsmu_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(nb), _tile_spec(nb)],
+        out_specs=_tile_spec(nb),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=_resolve(interpret),
+    )(u, b)
+
+
+def _gemmnn_kernel(a_ref, b_ref, c_ref, o_ref):
+    upd = _gemmnn_tile(a_ref[...][0], b_ref[...][0], c_ref[...][0])
+    o_ref[...] = upd[None].astype(o_ref.dtype)
+
+
+def batched_gemmnn(
+    a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, *, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    n, nb, _ = a.shape
+    return pl.pallas_call(
+        _gemmnn_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(nb), _tile_spec(nb), _tile_spec(nb)],
+        out_specs=_tile_spec(nb),
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=_resolve(interpret),
+    )(a, b, c)
+
+
+# --------------------------------------------------------------------------
 # Fused grid kernels (DESIGN.md §2, grid-resident epoch).
 #
 # Gather -> compute -> scatter in ONE kernel over the resident
@@ -234,6 +373,10 @@ grid_potrf = make_grid_fused(_potrf_tile, arity=1, write_arg=0)
 grid_trsm = make_grid_fused(_trsm_tile, arity=2, write_arg=1)
 grid_syrk = make_grid_fused(_syrk_tile, arity=2, write_arg=1)
 grid_gemm = make_grid_fused(_gemm_tile, arity=3, write_arg=2)
+grid_getrf = make_grid_fused(_getrf_tile, arity=1, write_arg=0)
+grid_trsml = make_grid_fused(_trsml_tile, arity=2, write_arg=1)
+grid_trsmu = make_grid_fused(_trsmu_tile, arity=2, write_arg=1)
+grid_gemmnn = make_grid_fused(_gemmnn_tile, arity=3, write_arg=2)
 
 # op name -> (fused call, write_arg); consumed by the WaveProgram compiler
 # when the backend is 'pallas' and the group writes exactly that argument.
@@ -242,6 +385,10 @@ GRID_FUSED = {
     "trsm": (grid_trsm, 1),
     "syrk": (grid_syrk, 1),
     "gemm": (grid_gemm, 2),
+    "getrf": (grid_getrf, 0),
+    "trsml": (grid_trsml, 1),
+    "trsmu": (grid_trsmu, 1),
+    "gemmnn": (grid_gemmnn, 2),
 }
 
 

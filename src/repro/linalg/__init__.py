@@ -1,4 +1,20 @@
 from .cholesky import run_cholesky, utp_cholesky
-from .ops import GEMM, POTRF, SYRK, TRSM
+from .lu import run_lu, run_solve, utp_getrf, utp_solve
+from .ops import GEMM, GEMMNN, GETRF, POTRF, SYRK, TRSM, TRSML, TRSMU
 
-__all__ = ["GEMM", "POTRF", "SYRK", "TRSM", "run_cholesky", "utp_cholesky"]
+__all__ = [
+    "GEMM",
+    "GEMMNN",
+    "GETRF",
+    "POTRF",
+    "SYRK",
+    "TRSM",
+    "TRSML",
+    "TRSMU",
+    "run_cholesky",
+    "run_lu",
+    "run_solve",
+    "utp_cholesky",
+    "utp_getrf",
+    "utp_solve",
+]

@@ -1,0 +1,93 @@
+"""Application + technical layers for LU and triangular solve (DESIGN.md §6).
+
+Mirrors ``cholesky.py``: ``utp_getrf`` / ``utp_solve`` are the technical-
+layer subroutines (create one root task, submit it); ``run_lu`` /
+``run_solve`` are whole application programs — define data + partitions,
+call the subroutine, drain.  They run unmodified under every task-flow
+graph g1–g4 with zero changes to executor code: the dispatcher only ever
+sees Operations.
+
+Conventions (pivot-free Doolittle, see ``linalg/ops.py``):
+
+    run_lu(a)                -> (L, U) with L unit-lower, U upper, L@U == a
+    run_solve(a, b)          -> x with tril(a, unit) @ x == b
+    run_solve(a, b, lower=False) -> x with x @ triu(a) == b
+
+``run_solve`` reads only the relevant triangle of ``a`` (the leaves mask
+the other triangle), so a packed L\\U factor from ``run_lu`` can be passed
+straight back in for forward/backward substitution.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..core import Dispatcher, GData, GTask
+from .ops import GETRF, TRSML, TRSMU
+
+
+def utp_getrf(dispatcher: Dispatcher, A: GData) -> GTask:
+    task = GTask(GETRF, None, [A.root_view()])
+    dispatcher.submit_task(task)
+    return task
+
+
+def utp_solve(dispatcher: Dispatcher, A: GData, B: GData, lower: bool = True) -> GTask:
+    op = TRSML if lower else TRSMU
+    task = GTask(op, None, [A.root_view(), B.root_view()])
+    dispatcher.submit_task(task)
+    return task
+
+
+def run_lu(
+    a: jnp.ndarray,
+    graph: str = "g2",
+    partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+    mesh=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pivot-free blocked LU of ``a``; returns (L, U) unpacked.
+
+    ``a`` must admit LU without pivoting (e.g. diagonally dominant or
+    already factored-friendly); there is no singular-pivot detection, as in
+    the paper's fixed task-flow expansion.
+    """
+    d = Dispatcher(graph=graph, mesh=mesh)
+    A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=jnp.asarray(a))
+    utp_getrf(d, A)
+    d.run()
+    packed = A.value
+    l = jnp.tril(packed, -1) + jnp.eye(packed.shape[0], dtype=packed.dtype)
+    u = jnp.triu(packed)
+    return l, u
+
+
+def run_solve(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    lower: bool = True,
+    graph: str = "g2",
+    partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+    b_partitions: Tuple[Tuple[int, int], ...] = None,
+    mesh=None,
+) -> jnp.ndarray:
+    """Blocked triangular solve as a task workload.
+
+    ``lower=True``: x = inv(tril(a, unit-diagonal)) @ b (forward subst.).
+    ``lower=False``: x = b @ inv(triu(a)) (backward substitution from the
+    right).  ``b_partitions`` defaults to ``partitions``; give it explicitly
+    for non-square block counts (b's row grid must match a's for lower,
+    its column grid for upper).
+    """
+    d = Dispatcher(graph=graph, mesh=mesh)
+    A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=jnp.asarray(a))
+    B = GData(
+        b.shape,
+        partitions=partitions if b_partitions is None else b_partitions,
+        dtype=b.dtype,
+        value=jnp.asarray(b),
+    )
+    utp_solve(d, A, B, lower=lower)
+    d.run()
+    return B.value

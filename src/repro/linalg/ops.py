@@ -1,17 +1,26 @@
 """Blocked linear-algebra Operations (paper Fig. 2b) on the UTP core.
 
-Four operations closed under hierarchical splitting:
+Two operation families, each closed under hierarchical splitting
+(DESIGN.md §6).  The Cholesky family:
 
     POTRF(A)       A -> L L^T (lower factor written back into A)
     TRSM(L, B)     B <- B @ inv(L)^T
     SYRK(A, C)     C <- C - A @ A^T
     GEMM(A, B, C)  C <- C - A @ B^T
 
-``split`` reproduces the paper's left-looking blocked Cholesky expansion;
-every child is again one of these four, so the same code splits level-1
-blocks into level-2 tiles (the DuctTeip-over-SuperGlue hierarchy).
-``leaf_fn``/``batched_leaf_fn`` provide the jnp (cpuBLAS analog) and Pallas
-(cuBLAS analog) leaves through the unified operation interface.
+and the LU family (pivot-free, Doolittle: L unit-lower, U non-unit upper):
+
+    GETRF(A)         A -> L\\U packed in place
+    TRSML(L, B)      B <- inv(L) @ B     (left, lower, unit-diagonal)
+    TRSMU(U, B)      B <- B @ inv(U)     (right, upper, non-unit)
+    GEMMNN(A, B, C)  C <- C - A @ B
+
+``split`` reproduces the blocked expansions (left-looking Cholesky per the
+paper's Fig. 2b, right-looking LU); every child is again a member of its
+family, so the same code splits level-1 blocks into level-2 tiles (the
+DuctTeip-over-SuperGlue hierarchy).  ``leaf_fn``/``batched_leaf_fn``
+provide the jnp (cpuBLAS analog) and Pallas (cuBLAS analog) leaves through
+the unified operation interface; the executors never special-case an op.
 """
 
 from __future__ import annotations
@@ -154,7 +163,146 @@ class GemmOp(Operation):
                     submit(GTask(GEMM, task, [A(i, k), B(j, k), C(i, j)]))
 
 
+class GetrfOp(Operation):
+    name = "getrf"
+
+    def default_modes(self, n):
+        return [Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda a: kops.getrf(a)
+        return kref.getrf
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_getrf
+        return jax.vmap(self.leaf_fn(backend))
+
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
+
+    def split(self, task: GTask, submit) -> None:
+        # Right-looking blocked LU on A's next level: factor the diagonal
+        # block, solve the U row panel (left/lower) and the L column panel
+        # (right/upper), then one Schur rank-b update of the trailing blocks.
+        A = task.args[0]
+        n = A.row_part_num()
+        for k in range(n):
+            submit(GTask(GETRF, task, [A(k, k)]))
+            for j in range(k + 1, n):
+                submit(GTask(TRSML, task, [A(k, k), A(k, j)]))
+            for i in range(k + 1, n):
+                submit(GTask(TRSMU, task, [A(k, k), A(i, k)]))
+            for i in range(k + 1, n):
+                for j in range(k + 1, n):
+                    submit(GTask(GEMMNN, task, [A(i, k), A(k, j), A(i, j)]))
+
+
+class TrsmLowerOp(Operation):
+    """B <- inv(L) @ B, L unit-lower (forward substitution, left side)."""
+
+    name = "trsml"
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda l, b: kops.trsml(l, b)
+        return kref.trsml
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_trsml
+        return jax.vmap(self.leaf_fn(backend))
+
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
+
+    def split(self, task: GTask, submit) -> None:
+        # X(i,q) = inv(L(i,i)) (B(i,q) - sum_{k<i} L(i,k) X(k,q)): block
+        # forward substitution down B's rows, for every column of blocks.
+        L, B = task.args
+        n = L.row_part_num()
+        m = B.col_part_num()
+        for i in range(n):
+            for q in range(m):
+                for k in range(i):
+                    submit(GTask(GEMMNN, task, [L(i, k), B(k, q), B(i, q)]))
+                submit(GTask(TRSML, task, [L(i, i), B(i, q)]))
+
+
+class TrsmUpperOp(Operation):
+    """B <- B @ inv(U), U upper non-unit (backward substitution, right side)."""
+
+    name = "trsmu"
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda u, b: kops.trsmu(u, b)
+        return kref.trsmu
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_trsmu
+        return jax.vmap(self.leaf_fn(backend))
+
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
+
+    def split(self, task: GTask, submit) -> None:
+        # X(q,j) = (B(q,j) - sum_{k<j} X(q,k) U(k,j)) inv(U(j,j)): block
+        # substitution across B's columns, for every row of blocks.
+        U, B = task.args
+        n = U.col_part_num()
+        m = B.row_part_num()
+        for j in range(n):
+            for q in range(m):
+                for k in range(j):
+                    submit(GTask(GEMMNN, task, [B(q, k), U(k, j), B(q, j)]))
+                submit(GTask(TRSMU, task, [U(j, j), B(q, j)]))
+
+
+class GemmNNOp(Operation):
+    name = "gemmnn"
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READ, Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda a, b, c: kops.gemmnn(a, b, c)
+        return kref.gemmnn
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_gemmnn
+        return jax.vmap(self.leaf_fn(backend))
+
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
+
+    def split(self, task: GTask, submit) -> None:
+        # C -= A B blocked: C(i,j) -= sum_k A(i,k) B(k,j)
+        A, B, C = task.args
+        m = C.row_part_num()
+        n = C.col_part_num()
+        kk = A.col_part_num()
+        for i in range(m):
+            for j in range(n):
+                for k in range(kk):
+                    submit(GTask(GEMMNN, task, [A(i, k), B(k, j), C(i, j)]))
+
+
 POTRF = OpRegistry.register(PotrfOp())
 TRSM = OpRegistry.register(TrsmOp())
 SYRK = OpRegistry.register(SyrkOp())
 GEMM = OpRegistry.register(GemmOp())
+GETRF = OpRegistry.register(GetrfOp())
+TRSML = OpRegistry.register(TrsmLowerOp())
+TRSMU = OpRegistry.register(TrsmUpperOp())
+GEMMNN = OpRegistry.register(GemmNNOp())

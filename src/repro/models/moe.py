@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ArchConfig
 from .layers import PSpec
 
@@ -291,7 +292,7 @@ def _moe_ep(cfg: ArchConfig, p, x: jnp.ndarray, ctx: MoeCtx):
         return out.reshape(Bl, Sl, D), aux
 
     wg_in = p.get("wg") if gated else jnp.zeros((), x.dtype)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(x_spec, P(None, None), w_spec, w_spec if gated else P(), wo_spec),

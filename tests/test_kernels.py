@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.data import spd_matrix
+from repro.core.data import dd_matrix, spd_matrix
 from repro.kernels import ops, ref
 
 DTYPES = [jnp.float32]
@@ -45,6 +45,62 @@ def test_gemm(n):
     a, b, c = rand(4, n, n), rand(5, n, n), rand(6, n, n)
     out = ops.gemm(a, b, c, interpret=True)
     np.testing.assert_allclose(out, ref.gemm(a, b, c), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_getrf(n):
+    a = dd_matrix(n, seed=n)
+    packed = ops.getrf(a, interpret=True)
+    np.testing.assert_allclose(packed, ref.getrf(a), rtol=2e-4, atol=2e-4)
+    # packed L\U really factors a: tril(,-1)+I @ triu == a
+    l = jnp.tril(packed, -1) + jnp.eye(n)
+    u = jnp.triu(packed)
+    np.testing.assert_allclose(l @ u, a, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_trsml_trsmu_mask_packed_junk(n):
+    """Solve leaves read only their triangle: packed L\\U input is fine."""
+    packed = ref.getrf(dd_matrix(n, seed=n))
+    b = rand(16, n, n)
+    np.testing.assert_allclose(
+        ops.trsml(packed, b, interpret=True),
+        ref.trsml(packed, b), rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        ops.trsmu(packed, b, interpret=True),
+        ref.trsmu(packed, b), rtol=2e-3, atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_gemmnn(n):
+    a, b, c = rand(17, n, n), rand(18, n, n), rand(19, n, n)
+    out = ops.gemmnn(a, b, c, interpret=True)
+    np.testing.assert_allclose(out, ref.gemmnn(a, b, c), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+@pytest.mark.parametrize("n", [8, 16])
+def test_batched_lu_kernels(batch, n):
+    a = jnp.stack([dd_matrix(n, seed=i) for i in range(batch)])
+    packed = ops.batched_getrf(a, interpret=True)
+    np.testing.assert_allclose(
+        packed, jax.vmap(ref.getrf)(a), rtol=2e-4, atol=2e-4
+    )
+    b = rand(20, batch, n, n)
+    np.testing.assert_allclose(
+        ops.batched_trsml(packed, b, interpret=True),
+        jax.vmap(ref.trsml)(packed, b), rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        ops.batched_trsmu(packed, b, interpret=True),
+        jax.vmap(ref.trsmu)(packed, b), rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        ops.batched_gemmnn(packed, b, a, interpret=True),
+        jax.vmap(ref.gemmnn)(packed, b, a), rtol=1e-4, atol=1e-4,
+    )
 
 
 @pytest.mark.parametrize("batch", [1, 3])
