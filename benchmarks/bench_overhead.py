@@ -4,14 +4,21 @@ Measures (a) pure dispatcher cost — submit+split+version+schedule per task
 with execution stubbed out — and (b) end-to-end wave-batched execution vs
 a hand-written blocked-cholesky jnp loop (no task layer at all), plus the
 executor launch/compile counters that witness whole-schedule compilation
-(one compiled WaveProgram per repeated schedule; DESIGN.md §2/§5).
+(one compiled WaveProgram per repeated schedule; DESIGN.md §2/§5) and the
+fused-group counters that witness the dependency-exact scheduling pass
+(``lu_groups_before`` / ``lu_groups_after_fusion`` on the multi-root LU
+drain; single-root LU sits at its chain lower bound and must record
+groups == groups_prefusion).
 
 Emits ``BENCH_overhead.json`` (machine-readable; tracked PR-over-PR).
+``--smoke`` runs a fast, small-size variant for CI's compile-counter
+regression gate and writes ``BENCH_overhead.smoke.json`` instead.
 """
 
 from __future__ import annotations
 
 import json
+import sys
 import time
 
 import jax
@@ -20,15 +27,16 @@ import jax.numpy as jnp
 from repro.core import Dispatcher, GData, GTask, dd_matrix, spd_matrix
 from repro.core.executors import clear_compile_cache
 from repro.core.executors.base import Executor
-from repro.linalg import run_cholesky, run_lu
+from repro.linalg import run_cholesky, run_lu, run_lu_many
 from repro.linalg.cholesky import utp_cholesky
 from repro.linalg.lu import utp_getrf
 from repro.linalg.ops import POTRF
 from repro.kernels import ref as kref
 
-from .common import row, timeit
+from .common import row, timeit_pair
 
 JSON_PATH = "BENCH_overhead.json"
+SMOKE_JSON_PATH = "BENCH_overhead.smoke.json"
 
 
 class NullExecutor(Executor):
@@ -84,37 +92,51 @@ def hand_written_blocked_lu(a: jnp.ndarray, p: int) -> jnp.ndarray:
     return jnp.concatenate(rows, axis=0)
 
 
-def drain_stats(a: jnp.ndarray, p: int, graph: str = "g2", submit=utp_cholesky) -> dict:
-    """launches/compiles for a first and a structurally repeated drain."""
+def drain_stats(
+    mats, p: int, graph: str = "g2", submit=utp_cholesky
+) -> dict:
+    """launches/compiles/fused-group counters for a first and a
+    structurally repeated drain; ``mats`` may hold several root matrices
+    (the multi-root drain case)."""
+    if not isinstance(mats, (list, tuple)):
+        mats = [mats]
     clear_compile_cache()
     out = {}
     for which in ("first_drain", "repeat_drain"):
         d = Dispatcher(graph=graph)
-        A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
-        submit(d, A)
+        for a in mats:
+            A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
+            submit(d, A)
         n = d.run()
         out[which] = {
             "leaf_tasks": n,
             "launches": int(d.executor.stats.get("launches", 0)),
             "compiles": int(d.executor.stats.get("compiles", 0)),
+            "groups": int(d.executor.stats.get("groups", 0)),
+            "groups_prefusion": int(
+                d.executor.stats.get("groups_prefusion", 0)
+            ),
         }
     return out
 
 
-def main(quick: bool = True) -> None:
-    report = {"bench": "overhead", "backend": jax.default_backend()}
-    for nb in (4, 8, 16):
+def main(smoke: bool = False) -> None:
+    report = {"bench": "overhead", "backend": jax.default_backend(),
+              "mode": "smoke" if smoke else "full"}
+    n, p = (256, 8) if smoke else (512, 8)
+    warmup, iters = (1, 3) if smoke else (2, 11)
+    for nb in ((4, 8) if smoke else (4, 8, 16)):
         per_task = dispatcher_only_cost(nb)
         row(f"utp_dispatch_only_p{nb}", per_task, "per_task_overhead")
         report[f"dispatch_only_us_per_task_p{nb}"] = per_task * 1e6
 
-    n, p = 512, 8
     a = spd_matrix(n)
     hand = jax.jit(lambda x: hand_written_blocked(x, p))
-    t_hand = timeit(hand, a, warmup=2, iters=7)
+    t_hand, t_utp = timeit_pair(
+        lambda: hand(a),
+        lambda: run_cholesky(a, graph="g2", partitions=((p, p),)),
+        warmup=warmup, iters=iters)
     row(f"blocked_handwritten_n{n}_p{p}", t_hand, f"{(n**3/3)/t_hand/1e9:.2f}GF/s")
-    t_utp = timeit(lambda: run_cholesky(a, graph="g2", partitions=((p, p),)),
-                   warmup=2, iters=7)
     ratio = t_utp / t_hand
     row(f"blocked_utp_g2_n{n}_p{p}", t_utp,
         f"overhead={100*(ratio-1):+.1f}%")
@@ -129,11 +151,12 @@ def main(quick: bool = True) -> None:
     # LU through the same dispatcher/executors (operation-algebra parity)
     a_lu = dd_matrix(n)
     hand_lu = jax.jit(lambda x: hand_written_blocked_lu(x, p))
-    t_hand_lu = timeit(hand_lu, a_lu, warmup=2, iters=7)
+    t_hand_lu, t_utp_lu = timeit_pair(
+        lambda: hand_lu(a_lu),
+        lambda: run_lu(a_lu, graph="g2", partitions=((p, p),)),
+        warmup=warmup, iters=iters)
     row(f"blocked_lu_handwritten_n{n}_p{p}", t_hand_lu,
         f"{(2*n**3/3)/t_hand_lu/1e9:.2f}GF/s")
-    t_utp_lu = timeit(lambda: run_lu(a_lu, graph="g2", partitions=((p, p),)),
-                      warmup=2, iters=7)
     ratio_lu = t_utp_lu / t_hand_lu
     row(f"blocked_lu_utp_g2_n{n}_p{p}", t_utp_lu,
         f"overhead={100*(ratio_lu-1):+.1f}%")
@@ -143,11 +166,38 @@ def main(quick: bool = True) -> None:
         lu_utp_over_handwritten_ratio=ratio_lu,
         lu_stats=drain_stats(a_lu, p, submit=utp_getrf),
     )
-    with open(JSON_PATH, "w") as f:
+
+    # Multi-root LU drain (DESIGN.md §2): two independent factorizations in
+    # one drain; the dependency-exact pass fuses their same-signature
+    # groups across roots into shared launches.  This is the LU case where
+    # fusion MUST strictly reduce the group count (single-root LU is at
+    # its chain lower bound and stays at groups == groups_prefusion).
+    b_lu = dd_matrix(n, seed=7)
+    mstats = drain_stats([a_lu, b_lu], p, submit=utp_getrf)
+    first = mstats["first_drain"]
+    row("lu_multiroot_fusion", 0.0,
+        f"groups {first['groups_prefusion']}->{first['groups']}")
+    t_pair_sep, t_pair_fused = timeit_pair(
+        lambda: (run_lu(a_lu, partitions=((p, p),)),
+                 run_lu(b_lu, partitions=((p, p),))),
+        lambda: run_lu_many([a_lu, b_lu], partitions=((p, p),)),
+        warmup=warmup, iters=iters)
+    row("lu_pair_two_drains", t_pair_sep)
+    row("lu_pair_fused_drain", t_pair_fused,
+        f"speedup={t_pair_sep/t_pair_fused:.2f}x")
+    report.update(
+        lu_groups_before=first["groups_prefusion"],
+        lu_groups_after_fusion=first["groups"],
+        lu_multiroot_stats=mstats,
+        lu_pair_two_drains_us=t_pair_sep * 1e6,
+        lu_pair_fused_drain_us=t_pair_fused * 1e6,
+    )
+    path = SMOKE_JSON_PATH if smoke else JSON_PATH
+    with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"# wrote {JSON_PATH} (ratio={ratio:.3f}x)")
+    print(f"# wrote {path} (ratio={ratio:.3f}x)")
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

@@ -25,6 +25,31 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     return ts[len(ts) // 2]
 
 
+def timeit_pair(
+    fn_a: Callable, fn_b: Callable, warmup: int = 1, iters: int = 3
+) -> Tuple[float, float]:
+    """Interleaved A/B timing: (median_a, median_b) wall seconds per call.
+
+    The two sides alternate within every iteration, so their *ratio* is
+    robust to machine-load drift across the run — phase-separated timing
+    (timeit twice) can easily skew a ratio 2-3x on a shared box (§8)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta: List[float] = []
+    tb: List[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    ta.sort()
+    tb.sort()
+    return ta[len(ta) // 2], tb[len(tb) // 2]
+
+
 def row(name: str, seconds: float, derived: str = "") -> None:
     ROWS.append((name, seconds * 1e6, derived))
     print(f"{name},{seconds*1e6:.1f},{derived}")

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 gate + perf smoke.  Run from anywhere; cds to the repo root.
-#   scripts/ci.sh          # tests + overhead smoke
-#   scripts/ci.sh --full   # also the full benchmark suite
+#   scripts/ci.sh          # tests + overhead smoke + compile-counter gate
+#   scripts/ci.sh --full   # also the full bench_overhead + benchmark suite
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,10 +11,47 @@ echo "== tier-1: pytest =="
 # no -x: report every failure; set -e still fails the gate on any red test
 python -m pytest -q
 
-echo "== perf smoke: bench_overhead (writes BENCH_overhead.json) =="
-python -m benchmarks.bench_overhead
+echo "== perf smoke: bench_overhead --smoke (writes BENCH_overhead.smoke.json) =="
+python -m benchmarks.bench_overhead --smoke
+
+echo "== gate: compile-counter / fusion regressions =="
+python - <<'EOF'
+import json, sys
+
+r = json.load(open("BENCH_overhead.smoke.json"))
+fail = []
+for case in ("stats", "lu_stats", "lu_multiroot_stats"):
+    rep = r[case]["repeat_drain"]
+    # repeated structurally-identical drains must replay: one program
+    # dispatch, zero recompiles (DESIGN.md §2 drain memo)
+    if rep["compiles"] != 0:
+        fail.append(f"{case}: repeat drain recompiled ({rep['compiles']})")
+    if rep["launches"] != 1:
+        fail.append(f"{case}: repeat drain launches {rep['launches']} != 1")
+# the dependency-exact pass must fuse the multi-root LU drain's
+# same-signature groups across roots (DESIGN.md §2 fusion rule)
+if not r["lu_groups_after_fusion"] < r["lu_groups_before"]:
+    fail.append(
+        f"multi-root LU fusion regressed: {r['lu_groups_after_fusion']} "
+        f"!< {r['lu_groups_before']}"
+    )
+# single-root LU sits at its chain lower bound: fusing anything there
+# would be a legality bug, not a win
+lu = r["lu_stats"]["first_drain"]
+if lu["groups"] != lu["groups_prefusion"]:
+    fail.append(
+        f"single-root LU group count changed: {lu['groups']} vs "
+        f"{lu['groups_prefusion']} prefusion (legality bug?)"
+    )
+if fail:
+    print("COMPILE/FUSION GATE FAILED:\n  " + "\n  ".join(fail))
+    sys.exit(1)
+print("compile-counter + fusion gate OK")
+EOF
 
 if [[ "${1:-}" == "--full" ]]; then
+  echo "== full bench_overhead (writes BENCH_overhead.json) =="
+  python -m benchmarks.bench_overhead
   echo "== full benchmark suite =="
   python -m benchmarks.run
 fi

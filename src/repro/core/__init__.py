@@ -11,7 +11,7 @@ from .dispatcher import Dispatcher
 from .graph import GRAPHS, TaskFlowGraph, get_graph
 from .operation import Operation, OpRegistry
 from .task import Access, GTask, TaskState
-from .versioning import DepTracker
+from .versioning import DepTracker, TaskDag
 
 __all__ = [
     "Access",
@@ -24,6 +24,7 @@ __all__ = [
     "Operation",
     "OpRegistry",
     "Region",
+    "TaskDag",
     "TaskFlowGraph",
     "TaskState",
     "dd_matrix",

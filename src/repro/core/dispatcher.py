@@ -187,7 +187,10 @@ class Dispatcher:
         self.stats["waves"] += len(waves)
         leaf_level = self.graph.split_levels
         if level >= leaf_level:
-            self.executor.execute_waves(waves)
+            # hand over the exact task DAG, not just the level schedule:
+            # the executor's scheduling pass issues dependency-exactly and
+            # fuses groups across former wave boundaries (DESIGN.md §2)
+            self.executor.execute_schedule(waves, tracker.dag())
             return
         for wave in waves:
             children: List[GTask] = []

@@ -3,10 +3,13 @@
 The paper requires every framework wrapper to implement predefined
 interfaces for data definition and task creation/submission/execution/
 completion so the dispatcher can talk to any of them generically.  Here the
-interface is ``execute_waves``: the dispatcher hands over a level-scheduled
-DAG (list of waves of independent tasks) plus the data store; completion is
-reported back via the returned count (synchronous SPMD world) and the
-per-task callback for the paper-faithful eager path.
+interface is ``execute_schedule``: the dispatcher hands over the Kahn level
+schedule (list of waves of independent tasks) together with the exact task
+DAG behind it (``versioning.TaskDag``), so capable executors can issue
+dependency-exactly and fuse groups across wave boundaries; ``execute_waves``
+is the DAG-less barrier form.  Completion is reported back via the returned
+count (synchronous SPMD world) and the per-task callback for the
+paper-faithful eager path.
 """
 
 from __future__ import annotations
@@ -42,6 +45,16 @@ class Executor:
     def __init__(self, on_task_finished: Optional[Callable[[GTask], None]] = None):
         self.on_task_finished = on_task_finished
         self.stats = defaultdict(int)
+
+    def execute_schedule(self, waves: List[List[GTask]], dag=None) -> int:
+        """Run a leaf schedule: the Kahn level waves plus (optionally) the
+        exact task DAG behind them (``versioning.TaskDag``).
+
+        Executors that can exploit the DAG — dependency-exact issue slots,
+        cross-wave group fusion — override this; the default ignores it and
+        runs the barrier-wave schedule, which is always a correct (if
+        conservative) linearization of the DAG."""
+        return self.execute_waves(waves)
 
     def execute_waves(self, waves: List[List[GTask]]) -> int:
         """Run all waves in order; within a wave tasks are independent."""

@@ -5,9 +5,11 @@ equivalent batches every wave of independent same-signature tasks into ONE
 vmapped + jitted launch so the MXU sees a single large batched kernel
 instead of many tiny ones (DESIGN.md §2).
 
-Primary path (``execute_waves``): the dispatcher's whole level schedule is
-compiled into a single XLA program over grid-resident roots by the
-WaveProgram compiler — one Python dispatch per drain, roots stay in
+Primary path (``execute_schedule``): the dispatcher's whole leaf schedule
+plus its exact task DAG is compiled into a single XLA program over
+grid-resident roots by the WaveProgram compiler — dependency-exact issue
+slots, same-signature groups fused across former wave boundaries (also
+across roots), one Python dispatch per drain; roots stay in
 ``(nr, nc, br, bc)`` layout for the epoch, and repeated drains with the
 same schedule structure reuse one compiled program.
 
@@ -60,13 +62,18 @@ class ProgramRecord:
     """One compiled-program execution inside a captured drain.
 
     ``root_slots`` index into the drain's root-argument data order; the
-    dispatcher resolves them to fresh ``GData`` objects on replay."""
+    dispatcher resolves them to fresh ``GData`` objects on replay.
+    ``idxs`` is the plan's device-resident flat index array — replay reuses
+    it as-is, no host concatenation or transfer."""
 
     fn: object  # the jitted WaveProgram
     root_slots: Tuple[int, ...]
     blocks: Tuple[Tuple[int, int], ...]  # per-root leaf block shape
     idxs: jnp.ndarray  # flat (total, 2) int32 block indices (device)
     n_tasks: int
+    n_groups: int = 0  # fused launch count inside the program
+    n_groups_prefusion: int = 0  # barrier-wave group count before fusion
+    n_slots: int = 0  # dependency-exact issue slots
 
 
 class JitWaveExecutor(Executor):
@@ -113,15 +120,19 @@ class JitWaveExecutor(Executor):
             data.set_grid(g)
         self.stats["tasks"] += rec.n_tasks
         self.stats["launches"] += 1
+        self.stats["groups"] += rec.n_groups
+        self.stats["groups_prefusion"] += rec.n_groups_prefusion
+        self.stats["slots"] += rec.n_slots
         return rec.n_tasks
 
     # -- whole-schedule compiled path (DESIGN.md §2) ---------------------------
-    def execute_waves(self, waves: List[List[GTask]]) -> int:
+    def execute_schedule(self, waves: List[List[GTask]], dag=None) -> int:
+        """Dependency-exact compiled execution of a whole leaf schedule."""
         waves = [w for w in waves if w]
         if not waves:
             return 0
         self._prepare_roots(waves)
-        plan = plan_schedule(waves)
+        plan = plan_schedule(waves, dag)
         if plan is None:
             self._capture_ok = False
             n = 0
@@ -129,6 +140,9 @@ class JitWaveExecutor(Executor):
                 n += self.execute_wave(wave)
             return n
         return self._run_program(plan)
+
+    def execute_waves(self, waves: List[List[GTask]]) -> int:
+        return self.execute_schedule(waves)
 
     def _prepare_roots(self, waves: Sequence[Sequence[GTask]]) -> None:
         """Hook: place/distribute roots before planning (ShardExecutor)."""
@@ -168,7 +182,7 @@ class JitWaveExecutor(Executor):
             fn = build_program(plan, self.backend, self.donate, out_shardings)
             self._fn_cache[key] = fn
             self.stats["compiles"] += 1
-        idxs = plan.flat_idxs()
+        idxs = plan.flat_idxs  # built once at plan time, device-resident
         outs = fn(grids, idxs)
         for data, g in zip(datas, outs):
             data.set_grid(g)
@@ -178,13 +192,25 @@ class JitWaveExecutor(Executor):
                 self._capture_ok = False  # touches a non-root-arg datum
             else:
                 self._capture.append(
-                    ProgramRecord(fn, slots, plan.blocks, idxs, len(plan.tasks))
+                    ProgramRecord(
+                        fn,
+                        slots,
+                        plan.blocks,
+                        idxs,
+                        len(plan.tasks),
+                        plan.n_groups,
+                        plan.n_groups_prefusion,
+                        plan.n_slots,
+                    )
                 )
         for t in plan.tasks:
             t.state = TaskState.FINISHED
             self.stats["tasks"] += 1
             self._finished(t)
         self.stats["launches"] += 1
+        self.stats["groups"] += plan.n_groups
+        self.stats["groups_prefusion"] += plan.n_groups_prefusion
+        self.stats["slots"] += plan.n_slots
         return len(plan.tasks)
 
     # -- per-group fallback path -----------------------------------------------

@@ -88,7 +88,12 @@ class ShardExecutor(JitWaveExecutor):
 
     def _prepare_roots(self, waves: Sequence[Sequence[GTask]]) -> None:
         # lazily place any root not yet distributed (first drain only; the
-        # resident grid keeps its sharding across subsequent drains)
+        # resident grid keeps its sharding across subsequent drains).
+        # Called from execute_schedule before planning, so the distributed
+        # graphs ride the same dependency-exact fused schedule as the local
+        # ones — a multi-root drain's fused cross-root groups gather from
+        # several sharded grids and XLA's SPMD partitioner inserts the
+        # collectives around the one compiled program (DESIGN.md §2).
         for wave in waves:
             for t in wave:
                 for v in t.args:

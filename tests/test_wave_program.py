@@ -193,6 +193,38 @@ def test_memoize_drains_opt_out():
     np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6)
 
 
+def test_flat_idxs_built_at_plan_time_and_replay_reuses_device_array():
+    """The concatenated block-index array is constructed ONCE at plan time
+    (a SchedulePlan field, not a per-execution host concatenation) and the
+    drain memo's ProgramRecord carries that device array, so replays reuse
+    it without any host work or transfer."""
+    from repro.core.executors.jit_wave import _DRAIN_MEMO
+
+    clear_compile_cache()
+    a = spd_matrix(32, seed=9)
+    _drain_cholesky("g2", a, ((4, 4),))  # capture
+    assert len(_DRAIN_MEMO) == 1
+    (memo,) = _DRAIN_MEMO.values()
+    (rec,) = memo["records"]
+    assert isinstance(rec.idxs, jnp.ndarray) and rec.idxs.shape[1] == 2
+    before = id(rec.idxs)
+    _drain_cholesky("g2", a, ((4, 4),))  # replay
+    (memo2,) = _DRAIN_MEMO.values()
+    (rec2,) = memo2["records"]
+    assert id(rec2.idxs) == before  # device-resident array reused as-is
+    # plan-time construction: SchedulePlan.flat_idxs is data, not a method
+    from repro.core import DepTracker, GData as GD
+    from repro.linalg.ops import SYRK
+
+    A = GD((8, 8), partitions=((2, 2),), value=np.eye(8, dtype=np.float32))
+    tasks = [GTask(SYRK, None, [A(i, i), A(1 - i, 1 - i)]) for i in range(1)]
+    tr = DepTracker()
+    for t in tasks:
+        tr.add(t)
+    plan = plan_schedule(tr.waves(), tr.dag())
+    assert isinstance(plan.flat_idxs, jnp.ndarray)
+
+
 # --------------------------------------------------------------------------
 # Numerical parity: grid-resident path vs sequential InlineExecutor (g1)
 # --------------------------------------------------------------------------
