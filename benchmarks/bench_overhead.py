@@ -8,7 +8,10 @@ executor launch/compile counters that witness whole-schedule compilation
 fused-group counters that witness the dependency-exact scheduling pass
 (``lu_groups_before`` / ``lu_groups_after_fusion`` on the multi-root LU
 drain; single-root LU sits at its chain lower bound and must record
-groups == groups_prefusion).
+groups == groups_prefusion), plus the composed ``lu_solve`` drain
+(DESIGN.md §4: one WaveProgram for factor+solve; here fusion MUST strictly
+reduce the group count, and the fused drain is timed against the same
+pipeline as three barrier-separated drains).
 
 Emits ``BENCH_overhead.json`` (machine-readable; tracked PR-over-PR).
 ``--smoke`` runs a fast, small-size variant for CI's compile-counter
@@ -23,13 +26,14 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import Dispatcher, GData, GTask, dd_matrix, spd_matrix
 from repro.core.executors import clear_compile_cache
 from repro.core.executors.base import Executor
-from repro.linalg import run_cholesky, run_lu, run_lu_many
+from repro.linalg import run_cholesky, run_lu, run_lu_many, run_lu_solve
 from repro.linalg.cholesky import utp_cholesky
-from repro.linalg.lu import utp_getrf
+from repro.linalg.lu import utp_getrf, utp_lu_solve, utp_solve
 from repro.linalg.ops import POTRF
 from repro.kernels import ref as kref
 
@@ -97,7 +101,9 @@ def drain_stats(
 ) -> dict:
     """launches/compiles/fused-group counters for a first and a
     structurally repeated drain; ``mats`` may hold several root matrices
-    (the multi-root drain case)."""
+    (the multi-root drain case), and an entry may itself be a tuple of
+    matrices submitted to one root (composed workloads: ``utp_lu_solve``
+    takes A and B)."""
     if not isinstance(mats, (list, tuple)):
         mats = [mats]
     clear_compile_cache()
@@ -105,8 +111,12 @@ def drain_stats(
     for which in ("first_drain", "repeat_drain"):
         d = Dispatcher(graph=graph)
         for a in mats:
-            A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
-            submit(d, A)
+            group = a if isinstance(a, tuple) else (a,)
+            datas = [
+                GData(m.shape, partitions=((p, p),), dtype=m.dtype, value=m)
+                for m in group
+            ]
+            submit(d, *datas)
         n = d.run()
         out[which] = {
             "leaf_tasks": n,
@@ -191,6 +201,48 @@ def main(smoke: bool = False) -> None:
         lu_multiroot_stats=mstats,
         lu_pair_two_drains_us=t_pair_sep * 1e6,
         lu_pair_fused_drain_us=t_pair_fused * 1e6,
+    )
+
+    # End-to-end lu_solve (DESIGN.md §4): the composed factor+solve drain
+    # vs the same pipeline as three barrier-separated drains (factor,
+    # forward solve, backward solve).  The composed drain is the
+    # single-root case where fusion MUST strictly reduce the group count
+    # (solve groups merge into independent same-signature factor groups).
+    b_rhs = jnp.asarray(
+        np.random.default_rng(0).standard_normal((n, n)).astype(np.float32)
+    )
+
+    def lu_solve_three_drains():
+        A = GData(a_lu.shape, partitions=((p, p),), dtype=a_lu.dtype, value=a_lu)
+        B = GData(b_rhs.shape, partitions=((p, p),), dtype=b_rhs.dtype, value=b_rhs)
+        d1 = Dispatcher(graph="g2")
+        utp_getrf(d1, A)
+        d1.run()
+        d2 = Dispatcher(graph="g2")
+        utp_solve(d2, A, B, lower=True)
+        d2.run()
+        d3 = Dispatcher(graph="g2")
+        utp_solve(d3, A, B, lower=False, side="left")
+        d3.run()
+        return B.value
+
+    t_three, t_fused_solve = timeit_pair(
+        lu_solve_three_drains,
+        lambda: run_lu_solve(a_lu, b_rhs, partitions=((p, p),)),
+        warmup=warmup, iters=iters)
+    row("lu_solve_three_drains", t_three)
+    row("lu_solve_fused_drain", t_fused_solve,
+        f"speedup={t_three/t_fused_solve:.2f}x")
+    sstats = drain_stats([(a_lu, b_rhs)], p, submit=utp_lu_solve)
+    sfirst = sstats["first_drain"]
+    row("lu_solve_fusion", 0.0,
+        f"groups {sfirst['groups_prefusion']}->{sfirst['groups']}")
+    report.update(
+        lu_solve_stats=sstats,
+        lu_solve_groups_before=sfirst["groups_prefusion"],
+        lu_solve_groups_after_fusion=sfirst["groups"],
+        lu_solve_three_drains_us=t_three * 1e6,
+        lu_solve_fused_drain_us=t_fused_solve * 1e6,
     )
     path = SMOKE_JSON_PATH if smoke else JSON_PATH
     with open(path, "w") as f:

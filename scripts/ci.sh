@@ -20,7 +20,7 @@ import json, sys
 
 r = json.load(open("BENCH_overhead.smoke.json"))
 fail = []
-for case in ("stats", "lu_stats", "lu_multiroot_stats"):
+for case in ("stats", "lu_stats", "lu_multiroot_stats", "lu_solve_stats"):
     rep = r[case]["repeat_drain"]
     # repeated structurally-identical drains must replay: one program
     # dispatch, zero recompiles (DESIGN.md §2 drain memo)
@@ -43,10 +43,66 @@ if lu["groups"] != lu["groups_prefusion"]:
         f"single-root LU group count changed: {lu['groups']} vs "
         f"{lu['groups_prefusion']} prefusion (legality bug?)"
     )
+# the composed factor+solve drain (DESIGN.md §4) is ONE WaveProgram and
+# the case where single-root fusion MUST strictly reduce the group count
+# (solve groups overlap independent same-signature factor groups)
+ls = r["lu_solve_stats"]["first_drain"]
+if ls["launches"] != 1 or ls["compiles"] != 1:
+    fail.append(
+        f"lu_solve first drain not one program: launches {ls['launches']}, "
+        f"compiles {ls['compiles']}"
+    )
+if not ls["groups"] < ls["groups_prefusion"]:
+    fail.append(
+        f"lu_solve overlap fusion regressed: {ls['groups']} !< "
+        f"{ls['groups_prefusion']} prefusion"
+    )
 if fail:
     print("COMPILE/FUSION GATE FAILED:\n  " + "\n  ".join(fail))
     sys.exit(1)
 print("compile-counter + fusion gate OK")
+EOF
+
+echo "== examples smoke (executable documentation) =="
+python examples/quickstart.py 64 4 2
+python examples/lu_solve.py 64 4 2
+
+echo "== docs: README/DESIGN links + section references resolve =="
+python - <<'EOF'
+import os, re, sys
+
+fail = []
+# 1) relative markdown links in README/DESIGN point at real files
+for path in ("README.md", "DESIGN.md"):
+    text = open(path).read()
+    for target in re.findall(r"\]\(([^)\s]+)\)", text):
+        target = target.split("#")[0]
+        if not target or "://" in target or target.startswith("mailto:"):
+            continue
+        if not os.path.exists(target):
+            fail.append(f"{path}: broken link -> {target}")
+# 2) every "DESIGN.md §N" citation (docs, source, tests, benchmarks)
+#    resolves to a top-level DESIGN.md heading — this is what keeps the
+#    load-bearing section numbering gap-free
+secs = set(re.findall(r"^## (§\d+)", open("DESIGN.md").read(), flags=re.M))
+cites = {}
+scan = ["README.md", "DESIGN.md", "ROADMAP.md"]
+for root in ("src", "tests", "benchmarks", "examples"):
+    for dirpath, _, names in os.walk(root):
+        scan += [os.path.join(dirpath, n) for n in names if n.endswith(".py")]
+for path in scan:
+    # compound citations ("DESIGN.md §4/§6") count every listed section
+    for group in re.findall(r"DESIGN\.md ((?:§\d+[/,])*§\d+)", open(path).read()):
+        for ref in re.findall(r"§\d+", group):
+            cites.setdefault(ref, path)
+for ref, path in sorted(cites.items()):
+    if ref not in secs:
+        fail.append(f"{path}: DESIGN.md {ref} cited but no such section")
+if fail:
+    print("DOCS LINK GATE FAILED:\n  " + "\n  ".join(fail))
+    sys.exit(1)
+print(f"docs link gate OK ({len(cites)} section citations, "
+      f"{len(secs)} sections)")
 EOF
 
 if [[ "${1:-}" == "--full" ]]; then

@@ -1,7 +1,15 @@
 """Paper-style application-layer facade (Fig. 2a): utp_initialize/finalize.
 
 Keeps a module-level current dispatcher so application programs read like
-the paper's ``unified_cholesky.cpp``.
+the paper's ``unified_cholesky.cpp``:
+
+    utp_initialize(graph="g2")            # pick the task-flow graph
+    A = GData(...); utp_cholesky(dispatcher(), A)   # submit root tasks
+    utp_finalize()                        # drain: run everything submitted
+
+For library code prefer constructing a ``Dispatcher`` directly (as
+``repro.linalg.run_*`` do); this facade exists for paper-shaped example
+programs and scripts.
 """
 
 from __future__ import annotations
@@ -15,12 +23,20 @@ _current: Optional[Dispatcher] = None
 
 
 def utp_initialize(graph: str = "g2", mesh=None) -> Dispatcher:
+    """Create the current dispatcher (paper Fig. 2a line 11).
+
+    ``graph`` names a task-flow graph (g1/g2/g2p/g3/g4/g3flat — see
+    ``core.graph.GRAPHS``); distributed graphs additionally need ``mesh``
+    (a ``jax.sharding.Mesh``).  Returns the dispatcher, which is also
+    reachable through ``dispatcher()`` until the next ``utp_initialize``.
+    """
     global _current
     _current = Dispatcher(graph=graph, mesh=mesh)
     return _current
 
 
 def dispatcher() -> Dispatcher:
+    """The dispatcher created by the last ``utp_initialize`` call."""
     if _current is None:
         raise RuntimeError("call utp_initialize() first")
     return _current

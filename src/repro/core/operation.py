@@ -22,6 +22,31 @@ from .task import Access, GTask
 
 
 class Operation:
+    """One registered operation kind — the unit the whole system speaks.
+
+    Hook contract (everything the dispatcher/executors ever call):
+
+    ``name``                 process-unique registry key; also the wave-
+                             batching signature component.
+    ``default_modes(n)``     per-argument access intents (READ/WRITE/
+                             READWRITE) used by data versioning.
+    ``can_split``/``split``  hierarchical expansion into child tasks on the
+                             next partition level (pure in geometry when
+                             ``memoizable``); a *composed* operation may
+                             expand a whole pipeline of family members
+                             into one scope (DESIGN.md §4).
+    ``leaf_fn(backend)``     pure block computation, one updated array per
+                             write-mode argument (tuple if several).
+    ``batched_leaf_fn``      stacked-blocks form; defaults to ``vmap`` of
+                             ``leaf_fn`` so new ops ride the wave
+                             executors with no extra code.
+    ``grid_fused_fn``        optional fused gather/compute/scatter kernel
+                             over resident grids (Pallas backend).
+
+    Executors never special-case an op name — implementing these hooks is
+    the entire integration surface (DESIGN.md §6).
+    """
+
     name: str = "op"
 
     # Drain-memo contract (DESIGN.md §2): True asserts that ``split`` is a

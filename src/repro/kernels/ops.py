@@ -24,6 +24,7 @@ from .tile_linalg import (
     batched_trsm,
     batched_trsml,
     batched_trsmu,
+    batched_trsmul,
     default_interpret,
     grid_gemm,
     grid_gemmnn,
@@ -33,6 +34,7 @@ from .tile_linalg import (
     grid_trsm,
     grid_trsml,
     grid_trsmu,
+    grid_trsmul,
     matmul,
 )
 
@@ -73,6 +75,23 @@ def trsmu(u: jnp.ndarray, b: jnp.ndarray, interpret=None) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def trsmul(u: jnp.ndarray, b: jnp.ndarray, interpret=None) -> jnp.ndarray:
+    return batched_trsmul(u[None], b[None], interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lu_solve(a: jnp.ndarray, b: jnp.ndarray, interpret=None):
+    """Single-tile factor + forward/backward substitution (LUSOLVE leaf).
+
+    Returns ``(packed, x)``, mirroring ``ref.lu_solve`` — one updated array
+    per READWRITE argument of the composed operation."""
+    packed = batched_getrf(a[None], interpret=interpret)[0]
+    y = batched_trsml(packed[None], b[None], interpret=interpret)[0]
+    x = batched_trsmul(packed[None], y[None], interpret=interpret)[0]
+    return packed, x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def gemmnn(
     a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, interpret=None
 ) -> jnp.ndarray:
@@ -89,6 +108,7 @@ __all__ = [
     "grid_trsm",
     "grid_trsml",
     "grid_trsmu",
+    "grid_trsmul",
     "batched_gemm",
     "batched_gemmnn",
     "batched_getrf",
@@ -97,15 +117,18 @@ __all__ = [
     "batched_trsm",
     "batched_trsml",
     "batched_trsmu",
+    "batched_trsmul",
     "default_interpret",
     "flash_attention",
     "gemm",
     "gemmnn",
     "getrf",
+    "lu_solve",
     "matmul",
     "potrf",
     "syrk",
     "trsm",
     "trsml",
     "trsmu",
+    "trsmul",
 ]

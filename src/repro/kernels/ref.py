@@ -9,7 +9,9 @@ and the blocked right-looking pivot-free LU (DESIGN.md §6):
     getrf(a)        -> packed L\\U factors (L unit-lower implicit, U upper)
     trsml(l, b)     -> inv(tril(l, unit)) @ b   (left, lower, unit-diagonal)
     trsmu(u, b)     -> b @ inv(triu(u))         (right, upper, non-unit)
+    trsmul(u, b)    -> inv(triu(u)) @ b         (left, upper, non-unit)
     gemmnn(a, b, c) -> c - a @ b
+    lu_solve(a, b)  -> (packed L\\U of a, x with a @ x == b)
 All oracles compute in float32 and cast back to the input dtype.  The
 triangular-solve oracles read only their own triangle (plus U's diagonal),
 so packed L\\U blocks can be passed without masking.
@@ -67,8 +69,24 @@ def trsmu(u: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return x.T.astype(b.dtype)
 
 
+def trsmul(u: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    # left-upper backward substitution (solve_triangular reads triu(u) only)
+    x = solve_triangular(_f32(u), _f32(b), lower=False)
+    return x.astype(b.dtype)
+
+
 def gemmnn(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     return (_f32(c) - _f32(a) @ _f32(b)).astype(c.dtype)
+
+
+def lu_solve(a: jnp.ndarray, b: jnp.ndarray):
+    """Whole lu_solve pipeline on one block: factor then two substitutions.
+
+    Returns ``(packed, x)`` — one updated array per READWRITE argument of
+    the composed LUSOLVE operation (a is replaced by its packed L\\U factor,
+    b by the solution of ``a @ x == b``)."""
+    packed = getrf(a)
+    return packed, trsmul(packed, trsml(packed, b))
 
 
 def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

@@ -37,6 +37,11 @@ def _tile_spec(b: int):
     return pl.BlockSpec((1, b, b), lambda i: (i, 0, 0))
 
 
+def _stack_spec(shape):
+    """BlockSpec for one (possibly non-square) tile of an (n, br, bc) stack."""
+    return pl.BlockSpec((1,) + tuple(shape[1:]), lambda i: (i, 0, 0))
+
+
 # --------------------------------------------------------------------------
 # Tile bodies — pure (b, b) math shared by the batched per-tile kernels and
 # the fused grid kernels below.
@@ -123,6 +128,26 @@ def _trsmu_tile(U: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     def body(j, X):
         s = X @ U[:, j]
         return X.at[:, j].set((B[:, j] - s) / U[j, j])
+
+    return lax.fori_loop(0, nb, body, jnp.zeros_like(B))
+
+
+def _trsmul_tile(U: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """X = inv(U) @ B with U upper non-unit (stored lower junk ignored).
+
+    Bottom-up row recurrence: X[i] = (B[i] - U[i] @ X) / U[i, i].  Rows
+    <= i of X are still zero when row i is computed, so U's sub-diagonal
+    content multiplies zeros — packed L\\U blocks pass unmasked (same trick
+    as ``_trsml_tile``, run in reverse row order).
+    """
+    U = U.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    nb = U.shape[-1]
+
+    def body(j, X):
+        i = nb - 1 - j
+        s = U[i] @ X
+        return X.at[i].set((B[i] - s) / U[i, i])
 
     return lax.fori_loop(0, nb, body, jnp.zeros_like(B))
 
@@ -258,11 +283,12 @@ def batched_trsml(
     l: jnp.ndarray, b: jnp.ndarray, *, interpret: Optional[bool] = None
 ) -> jnp.ndarray:
     n, nb, _ = l.shape
+    # b tiles may be non-square (e.g. a blocked vector right-hand side)
     return pl.pallas_call(
         _trsml_kernel,
         grid=(n,),
-        in_specs=[_tile_spec(nb), _tile_spec(nb)],
-        out_specs=_tile_spec(nb),
+        in_specs=[_tile_spec(nb), _stack_spec(b.shape)],
+        out_specs=_stack_spec(b.shape),
         out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
         interpret=_resolve(interpret),
     )(l, b)
@@ -280,8 +306,27 @@ def batched_trsmu(
     return pl.pallas_call(
         _trsmu_kernel,
         grid=(n,),
-        in_specs=[_tile_spec(nb), _tile_spec(nb)],
-        out_specs=_tile_spec(nb),
+        in_specs=[_tile_spec(nb), _stack_spec(b.shape)],
+        out_specs=_stack_spec(b.shape),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=_resolve(interpret),
+    )(u, b)
+
+
+def _trsmul_kernel(u_ref, b_ref, x_ref):
+    X = _trsmul_tile(u_ref[...][0], b_ref[...][0])
+    x_ref[...] = X[None].astype(x_ref.dtype)
+
+
+def batched_trsmul(
+    u: jnp.ndarray, b: jnp.ndarray, *, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    n, nb, _ = u.shape
+    return pl.pallas_call(
+        _trsmul_kernel,
+        grid=(n,),
+        in_specs=[_tile_spec(nb), _stack_spec(b.shape)],
+        out_specs=_stack_spec(b.shape),
         out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
         interpret=_resolve(interpret),
     )(u, b)
@@ -295,12 +340,12 @@ def _gemmnn_kernel(a_ref, b_ref, c_ref, o_ref):
 def batched_gemmnn(
     a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, *, interpret: Optional[bool] = None
 ) -> jnp.ndarray:
-    n, nb, _ = a.shape
+    n = a.shape[0]
     return pl.pallas_call(
         _gemmnn_kernel,
         grid=(n,),
-        in_specs=[_tile_spec(nb), _tile_spec(nb), _tile_spec(nb)],
-        out_specs=_tile_spec(nb),
+        in_specs=[_stack_spec(a.shape), _stack_spec(b.shape), _stack_spec(c.shape)],
+        out_specs=_stack_spec(c.shape),
         out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
         interpret=_resolve(interpret),
     )(a, b, c)
@@ -376,6 +421,7 @@ grid_gemm = make_grid_fused(_gemm_tile, arity=3, write_arg=2)
 grid_getrf = make_grid_fused(_getrf_tile, arity=1, write_arg=0)
 grid_trsml = make_grid_fused(_trsml_tile, arity=2, write_arg=1)
 grid_trsmu = make_grid_fused(_trsmu_tile, arity=2, write_arg=1)
+grid_trsmul = make_grid_fused(_trsmul_tile, arity=2, write_arg=1)
 grid_gemmnn = make_grid_fused(_gemmnn_tile, arity=3, write_arg=2)
 
 # op name -> (fused call, write_arg); consumed by the WaveProgram compiler
@@ -388,6 +434,7 @@ GRID_FUSED = {
     "getrf": (grid_getrf, 0),
     "trsml": (grid_trsml, 1),
     "trsmu": (grid_trsmu, 1),
+    "trsmul": (grid_trsmul, 1),
     "gemmnn": (grid_gemmnn, 2),
 }
 

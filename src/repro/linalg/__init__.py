@@ -1,21 +1,65 @@
+"""Blocked dense linear algebra on the UTP core (the paper's technical +
+application layers, DESIGN.md §1/§6).
+
+Application programs (define data, submit, drain — identical under every
+task-flow graph g1–g4):
+
+    run_cholesky(a)     lower Cholesky factor of SPD ``a``
+    run_lu(a)           pivot-free blocked LU -> (L, U)
+    run_lu_many(mats)   several LUs in ONE multi-root drain
+    run_solve(a, b)     blocked triangular solve (TRSML / TRSMU / TRSMUL)
+    run_lu_solve(a, b)  factor + forward + backward solve in ONE drain
+    run_inv(a)          matrix inverse via the same composed pipeline
+
+Technical-layer subroutines (``utp_*``) create one root task on an existing
+dispatcher, for composing several workloads into one drain.  The operation
+singletons (POTRF .. LUSOLVE) are the registry entries the dispatcher and
+executors operate on — see ``linalg/ops.py`` for the algebra.
+"""
+
 from .cholesky import run_cholesky, utp_cholesky
-from .lu import run_lu, run_lu_many, run_solve, utp_getrf, utp_solve
-from .ops import GEMM, GEMMNN, GETRF, POTRF, SYRK, TRSM, TRSML, TRSMU
+from .lu import (
+    run_inv,
+    run_lu,
+    run_lu_many,
+    run_lu_solve,
+    run_solve,
+    utp_getrf,
+    utp_lu_solve,
+    utp_solve,
+)
+from .ops import (
+    GEMM,
+    GEMMNN,
+    GETRF,
+    LUSOLVE,
+    POTRF,
+    SYRK,
+    TRSM,
+    TRSML,
+    TRSMU,
+    TRSMUL,
+)
 
 __all__ = [
     "GEMM",
     "GEMMNN",
     "GETRF",
+    "LUSOLVE",
     "POTRF",
     "SYRK",
     "TRSM",
     "TRSML",
     "TRSMU",
+    "TRSMUL",
     "run_cholesky",
+    "run_inv",
     "run_lu",
     "run_lu_many",
+    "run_lu_solve",
     "run_solve",
     "utp_cholesky",
     "utp_getrf",
+    "utp_lu_solve",
     "utp_solve",
 ]

@@ -1,33 +1,40 @@
-"""Application + technical layers for LU and triangular solve (DESIGN.md §6).
+"""Application + technical layers for LU, triangular solve, and the
+end-to-end ``lu_solve`` drain (DESIGN.md §4/§6).
 
-Mirrors ``cholesky.py``: ``utp_getrf`` / ``utp_solve`` are the technical-
-layer subroutines (create one root task, submit it); ``run_lu`` /
-``run_solve`` are whole application programs — define data + partitions,
-call the subroutine, drain.  They run unmodified under every task-flow
-graph g1–g4 with zero changes to executor code: the dispatcher only ever
-sees Operations.
+Mirrors ``cholesky.py``: ``utp_getrf`` / ``utp_solve`` / ``utp_lu_solve``
+are the technical-layer subroutines (create one root task, submit it);
+``run_lu`` / ``run_solve`` / ``run_lu_solve`` / ``run_inv`` are whole
+application programs — define data + partitions, call the subroutine,
+drain.  They run unmodified under every task-flow graph g1–g4 with zero
+changes to executor code: the dispatcher only ever sees Operations.
 
 Conventions (pivot-free Doolittle, see ``linalg/ops.py``):
 
     run_lu(a)                -> (L, U) with L unit-lower, U upper, L@U == a
     run_solve(a, b)          -> x with tril(a, unit) @ x == b
-    run_solve(a, b, lower=False) -> x with x @ triu(a) == b
+    run_solve(a, b, lower=False)              -> x with x @ triu(a) == b
+    run_solve(a, b, lower=False, side="left") -> x with triu(a) @ x == b
+    run_lu_solve(a, b)       -> x with a @ x == b  (factor+solve, ONE drain)
+    run_inv(a)               -> inv(a)             (lu_solve against I)
 
 ``run_solve`` reads only the relevant triangle of ``a`` (the leaves mask
 the other triangle), so a packed L\\U factor from ``run_lu`` can be passed
-straight back in for forward/backward substitution.
+straight back in for forward/backward substitution.  ``run_lu_solve``
+composes all of that as ONE dispatcher drain: LU panel tasks, L-solve
+tasks, and U-solve tasks are versioned into a single task DAG and compiled
+into a single WaveProgram (the composed LUSOLVE operation, DESIGN.md §4).
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core import Dispatcher, GData, GTask
 from ..core.data import from_grid
-from .ops import GETRF, TRSML, TRSMU
+from .ops import GETRF, LUSOLVE, TRSML, TRSMU, TRSMUL
 
 
 def utp_getrf(dispatcher: Dispatcher, A: GData) -> GTask:
@@ -56,9 +63,44 @@ def _unpack(A: GData) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return _unpack_lu(A.value)
 
 
-def utp_solve(dispatcher: Dispatcher, A: GData, B: GData, lower: bool = True) -> GTask:
-    op = TRSML if lower else TRSMU
+def utp_solve(
+    dispatcher: Dispatcher,
+    A: GData,
+    B: GData,
+    lower: bool = True,
+    side: Optional[str] = None,
+) -> GTask:
+    """Submit one triangular-solve root task (technical layer).
+
+    ``side`` defaults to the algebra's native orientation per triangle:
+    "left" for lower (TRSML, forward substitution) and "right" for upper
+    (TRSMU).  ``lower=False, side="left"`` selects TRSMUL — the left-upper
+    backward substitution that closes ``A x = b`` end-to-end.
+    """
+    if side is None:
+        side = "left" if lower else "right"
+    if lower:
+        if side != "left":
+            raise ValueError("lower solves are left-sided (TRSML) only")
+        op = TRSML
+    else:
+        if side not in ("left", "right"):
+            raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+        op = TRSMUL if side == "left" else TRSMU
     task = GTask(op, None, [A.root_view(), B.root_view()])
+    dispatcher.submit_task(task)
+    return task
+
+
+def utp_lu_solve(dispatcher: Dispatcher, A: GData, B: GData) -> GTask:
+    """Submit ONE composed factor+solve root task (LUSOLVE, DESIGN.md §4).
+
+    A single root keeps the whole expansion in one scope: the dispatcher
+    versions LU panel tasks, forward-substitution tasks, and backward-
+    substitution tasks into one task DAG and compiles one WaveProgram for
+    the entire pipeline (instead of three barrier-separated drains).
+    """
+    task = GTask(LUSOLVE, None, [A.root_view(), B.root_view()])
     dispatcher.submit_task(task)
     return task
 
@@ -114,14 +156,16 @@ def run_solve(
     partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
     b_partitions: Tuple[Tuple[int, int], ...] = None,
     mesh=None,
+    side: Optional[str] = None,
 ) -> jnp.ndarray:
     """Blocked triangular solve as a task workload.
 
     ``lower=True``: x = inv(tril(a, unit-diagonal)) @ b (forward subst.).
     ``lower=False``: x = b @ inv(triu(a)) (backward substitution from the
-    right).  ``b_partitions`` defaults to ``partitions``; give it explicitly
-    for non-square block counts (b's row grid must match a's for lower,
-    its column grid for upper).
+    right), or x = inv(triu(a)) @ b with ``side="left"`` (the left-upper
+    TRSMUL orientation).  ``b_partitions`` defaults to ``partitions``; give
+    it explicitly for non-square block counts (b's row grid must match a's
+    for left-sided solves, its column grid for the right-sided one).
     """
     d = Dispatcher(graph=graph, mesh=mesh)
     A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=jnp.asarray(a))
@@ -131,6 +175,62 @@ def run_solve(
         dtype=b.dtype,
         value=jnp.asarray(b),
     )
-    utp_solve(d, A, B, lower=lower)
+    utp_solve(d, A, B, lower=lower, side=side)
     d.run()
     return B.value
+
+
+def run_lu_solve(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    graph: str = "g2",
+    partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+    b_partitions: Tuple[Tuple[int, int], ...] = None,
+    mesh=None,
+) -> jnp.ndarray:
+    """Solve ``a @ x == b`` by pivot-free LU — factor AND solve in ONE drain.
+
+    The whole pipeline (LU panel tasks, forward-substitution tasks,
+    backward-substitution tasks) is submitted as one composed LUSOLVE root,
+    so it is versioned into one task DAG, compiled into one WaveProgram,
+    and replayed via the drain memo on structurally repeated calls — the
+    same single-drain/zero-recompile behaviour ``run_lu`` has, now for the
+    full solve (DESIGN.md §4).  Matches ``jax.scipy.linalg.lu_solve`` on
+    inputs where partial pivoting selects P == I (e.g. column-diagonally-
+    dominant ``a``); like ``run_lu`` there is no singular-pivot detection.
+
+    ``b`` may be a matrix ``(n, m)`` or a vector ``(n,)``; ``b_partitions``
+    defaults to ``partitions`` with the column counts collapsed to 1 for a
+    vector right-hand side.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if b.shape[0] != a.shape[0]:
+        raise ValueError(f"shape mismatch: a {a.shape} vs b {b.shape}")
+    vec = b.ndim == 1
+    b2 = b[:, None] if vec else b
+    if b_partitions is None:
+        b_partitions = tuple(
+            (pr, 1 if vec else pc) for pr, pc in partitions
+        )
+    d = Dispatcher(graph=graph, mesh=mesh)
+    A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=a)
+    B = GData(b2.shape, partitions=b_partitions, dtype=b2.dtype, value=b2)
+    utp_lu_solve(d, A, B)
+    d.run()
+    x = B.value
+    return x[:, 0] if vec else x
+
+
+def run_inv(
+    a: jnp.ndarray,
+    graph: str = "g2",
+    partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+    mesh=None,
+) -> jnp.ndarray:
+    """Matrix inverse via LU: ``run_lu_solve(a, I)`` — a second application
+    program over the same composed pipeline (A X = I), showing the family
+    is closed: no new operations, no executor changes."""
+    a = jnp.asarray(a)
+    eye = jnp.eye(a.shape[0], dtype=a.dtype)
+    return run_lu_solve(a, eye, graph=graph, partitions=partitions, mesh=mesh)

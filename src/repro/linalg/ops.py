@@ -13,14 +13,23 @@ and the LU family (pivot-free, Doolittle: L unit-lower, U non-unit upper):
     GETRF(A)         A -> L\\U packed in place
     TRSML(L, B)      B <- inv(L) @ B     (left, lower, unit-diagonal)
     TRSMU(U, B)      B <- B @ inv(U)     (right, upper, non-unit)
+    TRSMUL(U, B)     B <- inv(U) @ B     (left, upper, non-unit)
     GEMMNN(A, B, C)  C <- C - A @ B
+
+plus one *composed* workload over the LU family (DESIGN.md §4):
+
+    LUSOLVE(A, B)    A -> L\\U packed;  B <- inv(A) @ B
 
 ``split`` reproduces the blocked expansions (left-looking Cholesky per the
 paper's Fig. 2b, right-looking LU); every child is again a member of its
 family, so the same code splits level-1 blocks into level-2 tiles (the
-DuctTeip-over-SuperGlue hierarchy).  ``leaf_fn``/``batched_leaf_fn``
-provide the jnp (cpuBLAS analog) and Pallas (cuBLAS analog) leaves through
-the unified operation interface; the executors never special-case an op.
+DuctTeip-over-SuperGlue hierarchy).  LUSOLVE's split emits the factor
+expansion followed by the forward (TRSML) and backward (TRSMUL) block
+substitutions into ONE scope, so data versioning orders the whole
+factor+solve pipeline as a single task DAG — one WaveProgram per drain.
+``leaf_fn``/``batched_leaf_fn`` provide the jnp (cpuBLAS analog) and Pallas
+(cuBLAS analog) leaves through the unified operation interface; the
+executors never special-case an op.
 """
 
 from __future__ import annotations
@@ -163,6 +172,52 @@ class GemmOp(Operation):
                     submit(GTask(GEMM, task, [A(i, k), B(j, k), C(i, j)]))
 
 
+# --------------------------------------------------------------------------
+# Blocked expansions of the LU family, shared between the per-op splits and
+# the composed LUSOLVE split (which emits all three into one scope).  Each
+# is a pure function of argument geometry (the drain-memo contract).
+# --------------------------------------------------------------------------
+def _expand_getrf(task: GTask, A, submit) -> None:
+    # Right-looking blocked LU on A's next level: factor the diagonal
+    # block, solve the U row panel (left/lower) and the L column panel
+    # (right/upper), then one Schur rank-b update of the trailing blocks.
+    n = A.row_part_num()
+    for k in range(n):
+        submit(GTask(GETRF, task, [A(k, k)]))
+        for j in range(k + 1, n):
+            submit(GTask(TRSML, task, [A(k, k), A(k, j)]))
+        for i in range(k + 1, n):
+            submit(GTask(TRSMU, task, [A(k, k), A(i, k)]))
+        for i in range(k + 1, n):
+            for j in range(k + 1, n):
+                submit(GTask(GEMMNN, task, [A(i, k), A(k, j), A(i, j)]))
+
+
+def _expand_trsml(task: GTask, L, B, submit) -> None:
+    # X(i,q) = inv(L(i,i)) (B(i,q) - sum_{k<i} L(i,k) X(k,q)): block
+    # forward substitution down B's rows, for every column of blocks.
+    n = L.row_part_num()
+    m = B.col_part_num()
+    for i in range(n):
+        for q in range(m):
+            for k in range(i):
+                submit(GTask(GEMMNN, task, [L(i, k), B(k, q), B(i, q)]))
+            submit(GTask(TRSML, task, [L(i, i), B(i, q)]))
+
+
+def _expand_trsmul(task: GTask, U, B, submit) -> None:
+    # X(i,q) = inv(U(i,i)) (B(i,q) - sum_{k>i} U(i,k) X(k,q)): block
+    # backward substitution up B's rows.  Descending submission order makes
+    # versioning read the FINAL X(k,q) (k > i), not the forward-pass value.
+    n = U.row_part_num()
+    m = B.col_part_num()
+    for i in reversed(range(n)):
+        for q in range(m):
+            for k in range(i + 1, n):
+                submit(GTask(GEMMNN, task, [U(i, k), B(k, q), B(i, q)]))
+            submit(GTask(TRSMUL, task, [U(i, i), B(i, q)]))
+
+
 class GetrfOp(Operation):
     name = "getrf"
 
@@ -183,20 +238,7 @@ class GetrfOp(Operation):
         return kops.GRID_FUSED[self.name] if backend == "pallas" else None
 
     def split(self, task: GTask, submit) -> None:
-        # Right-looking blocked LU on A's next level: factor the diagonal
-        # block, solve the U row panel (left/lower) and the L column panel
-        # (right/upper), then one Schur rank-b update of the trailing blocks.
-        A = task.args[0]
-        n = A.row_part_num()
-        for k in range(n):
-            submit(GTask(GETRF, task, [A(k, k)]))
-            for j in range(k + 1, n):
-                submit(GTask(TRSML, task, [A(k, k), A(k, j)]))
-            for i in range(k + 1, n):
-                submit(GTask(TRSMU, task, [A(k, k), A(i, k)]))
-            for i in range(k + 1, n):
-                for j in range(k + 1, n):
-                    submit(GTask(GEMMNN, task, [A(i, k), A(k, j), A(i, j)]))
+        _expand_getrf(task, task.args[0], submit)
 
 
 class TrsmLowerOp(Operation):
@@ -221,16 +263,7 @@ class TrsmLowerOp(Operation):
         return kops.GRID_FUSED[self.name] if backend == "pallas" else None
 
     def split(self, task: GTask, submit) -> None:
-        # X(i,q) = inv(L(i,i)) (B(i,q) - sum_{k<i} L(i,k) X(k,q)): block
-        # forward substitution down B's rows, for every column of blocks.
-        L, B = task.args
-        n = L.row_part_num()
-        m = B.col_part_num()
-        for i in range(n):
-            for q in range(m):
-                for k in range(i):
-                    submit(GTask(GEMMNN, task, [L(i, k), B(k, q), B(i, q)]))
-                submit(GTask(TRSML, task, [L(i, i), B(i, q)]))
+        _expand_trsml(task, task.args[0], task.args[1], submit)
 
 
 class TrsmUpperOp(Operation):
@@ -265,6 +298,70 @@ class TrsmUpperOp(Operation):
                 for k in range(j):
                     submit(GTask(GEMMNN, task, [B(q, k), U(k, j), B(q, j)]))
                 submit(GTask(TRSMU, task, [U(j, j), B(q, j)]))
+
+
+class TrsmUpperLeftOp(Operation):
+    """B <- inv(U) @ B, U upper non-unit (backward substitution, left side).
+
+    The fourth TRSM orientation — the one that closes ``A x = b``: after a
+    pivot-free LU, ``x = inv(U) @ inv(L) @ b`` is one TRSML followed by one
+    TRSMUL.  Like the other solve leaves it reads only its own triangle
+    (plus the diagonal), so packed L\\U blocks pass through unmasked.
+    """
+
+    name = "trsmul"
+
+    def default_modes(self, n):
+        return [Access.READ, Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return lambda u, b: kops.trsmul(u, b)
+        return kref.trsmul
+
+    def batched_leaf_fn(self, backend: str) -> Callable:
+        if backend == "pallas":
+            return kops.batched_trsmul
+        return jax.vmap(self.leaf_fn(backend))
+
+    def grid_fused_fn(self, backend: str):
+        return kops.GRID_FUSED[self.name] if backend == "pallas" else None
+
+    def split(self, task: GTask, submit) -> None:
+        _expand_trsmul(task, task.args[0], task.args[1], submit)
+
+
+class LuSolveOp(Operation):
+    """Composed workload: factor A pivot-free and solve A X = B, in place.
+
+    ``split`` emits the full right-looking LU expansion followed by the
+    forward (TRSML) and backward (TRSMUL) block substitutions — all into
+    ONE scope, so data versioning orders the pipeline as a single task DAG
+    and the dispatcher compiles the whole factor+solve drain into one
+    WaveProgram, where the cross-wave fusion pass overlaps early solve
+    groups with late factor groups (DESIGN.md §4).  Every child is a plain
+    member of the LU family; the executors never see LUSOLVE below the
+    root level.
+    """
+
+    name = "lu_solve"
+
+    def default_modes(self, n):
+        # A -> packed L\U in place; B -> X in place
+        return [Access.READWRITE, Access.READWRITE]
+
+    def leaf_fn(self, backend: str) -> Callable:
+        # only reached when the root runs unsplit (g1, or 1-level data):
+        # factor + both substitutions on the whole matrices
+        if backend == "pallas":
+            return lambda a, b: kops.lu_solve(a, b)
+        return kref.lu_solve
+
+    def split(self, task: GTask, submit) -> None:
+        A, B = task.args
+        _expand_getrf(task, A, submit)
+        _expand_trsml(task, A, B, submit)
+        _expand_trsmul(task, A, B, submit)
 
 
 class GemmNNOp(Operation):
@@ -305,4 +402,6 @@ GEMM = OpRegistry.register(GemmOp())
 GETRF = OpRegistry.register(GetrfOp())
 TRSML = OpRegistry.register(TrsmLowerOp())
 TRSMU = OpRegistry.register(TrsmUpperOp())
+TRSMUL = OpRegistry.register(TrsmUpperLeftOp())
 GEMMNN = OpRegistry.register(GemmNNOp())
+LUSOLVE = OpRegistry.register(LuSolveOp())

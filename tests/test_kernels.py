@@ -71,6 +71,49 @@ def test_trsml_trsmu_mask_packed_junk(n):
         ops.trsmu(packed, b, interpret=True),
         ref.trsmu(packed, b), rtol=2e-3, atol=2e-3,
     )
+    np.testing.assert_allclose(
+        ops.trsmul(packed, b, interpret=True),
+        ref.trsmul(packed, b), rtol=2e-3, atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_trsmul(n):
+    """Left-upper TRSM (the fourth orientation): x = inv(triu(u)) @ b."""
+    u = jnp.triu(dd_matrix(n, seed=n))
+    b = rand(21, n, n)
+    out = ops.trsmul(u, b, interpret=True)
+    np.testing.assert_allclose(out, ref.trsmul(u, b), rtol=2e-3, atol=2e-3)
+    # solves the actual system
+    np.testing.assert_allclose(u @ out, b, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("bc", [1, 8])
+def test_trsmul_nonsquare_rhs(bc):
+    """RHS tiles may be non-square (blocked vector right-hand sides)."""
+    n = 16
+    u = jnp.triu(dd_matrix(n, seed=2))
+    b = rand(22, n, bc)
+    np.testing.assert_allclose(
+        ops.trsmul(u, b, interpret=True), ref.trsmul(u, b),
+        rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        ops.trsml(u, b, interpret=True), ref.trsml(u, b),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_lu_solve_leaf(n):
+    """The composed LUSOLVE leaf: (packed, x) with a @ x == b."""
+    a = dd_matrix(n, seed=n)
+    b = rand(23, n, n)
+    packed, x = ops.lu_solve(a, b, interpret=True)
+    rpacked, rx = ref.lu_solve(a, b)
+    np.testing.assert_allclose(packed, rpacked, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(x, rx, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(a @ x, b, rtol=2e-3, atol=2e-3)
 
 
 @pytest.mark.parametrize("n", SIZES)
@@ -96,6 +139,10 @@ def test_batched_lu_kernels(batch, n):
     np.testing.assert_allclose(
         ops.batched_trsmu(packed, b, interpret=True),
         jax.vmap(ref.trsmu)(packed, b), rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        ops.batched_trsmul(packed, b, interpret=True),
+        jax.vmap(ref.trsmul)(packed, b), rtol=2e-3, atol=2e-3,
     )
     np.testing.assert_allclose(
         ops.batched_gemmnn(packed, b, a, interpret=True),

@@ -14,12 +14,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.scipy.linalg import lu as scipy_lu, solve_triangular
+from jax.scipy.linalg import (
+    lu as scipy_lu,
+    lu_factor,
+    lu_solve as scipy_lu_solve,
+    solve_triangular,
+)
 
 from repro.core import Dispatcher, GData, OpRegistry, dd_matrix, utp_get_parameters
 from repro.core.executors import clear_compile_cache
-from repro.linalg import run_lu, run_solve
-from repro.linalg.lu import utp_getrf
+from repro.linalg import run_inv, run_lu, run_lu_solve, run_solve
+from repro.linalg.lu import utp_getrf, utp_lu_solve
 
 
 def _mesh_1d():
@@ -119,6 +124,30 @@ def test_solve_distributed(graph):
     np.testing.assert_allclose(np.asarray(x), np.asarray(want), atol=1e-5)
 
 
+@pytest.mark.parametrize("graph", ["g1", "g2", "g2p"])
+def test_solve_upper_left(graph):
+    """TRSMUL — the fourth TRSM orientation: x = inv(triu(a)) @ b."""
+    a = dd_matrix(64, seed=5)
+    b = jnp.asarray(
+        np.random.default_rng(4).standard_normal((64, 32)).astype(np.float32)
+    )
+    x = run_solve(
+        a, b, lower=False, side="left", graph=graph,
+        partitions=((4, 4),), b_partitions=((4, 2),),
+    )
+    want = solve_triangular(a, b, lower=False)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(want), atol=1e-5)
+
+
+def test_solve_side_validation():
+    a = dd_matrix(32, seed=1)
+    b = jnp.zeros((32, 32), jnp.float32)
+    with pytest.raises(ValueError, match="left"):
+        run_solve(a, b, lower=True, side="right", partitions=((2, 2),))
+    with pytest.raises(ValueError, match="side"):
+        run_solve(a, b, lower=False, side="up", partitions=((2, 2),))
+
+
 def test_lu_then_solve_round_trip():
     """Forward+backward substitution through the packed factor solves a@x=b."""
     n = 64
@@ -128,13 +157,113 @@ def test_lu_then_solve_round_trip():
     )
     L, U = run_lu(a, graph="g2", partitions=((4, 4),))
     packed = jnp.tril(L, -1) + U
-    y = run_solve(packed, b, lower=True, partitions=((4, 4),))  # L y = b
-    # U x = y  <=>  x^T @ U^T = y^T; use the right-sided upper solve on U^T?
-    # U^T is lower non-unit — outside the algebra; verify via residual instead.
-    np.testing.assert_allclose(
-        np.asarray(L @ y), np.asarray(b), atol=1e-4
-    )
     np.testing.assert_allclose(np.asarray(L @ U), np.asarray(a), atol=1e-5)
+    y = run_solve(packed, b, lower=True, partitions=((4, 4),))  # L y = b
+    np.testing.assert_allclose(np.asarray(L @ y), np.asarray(b), atol=1e-4)
+    # U x = y: the left-upper orientation (TRSMUL) completes the round trip
+    x = run_solve(packed, y, lower=False, side="left", partitions=((4, 4),))
+    np.testing.assert_allclose(np.asarray(a @ x), np.asarray(b), atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# run_lu_solve: the end-to-end factor+solve pipeline in ONE drain
+# --------------------------------------------------------------------------
+def _lu_solve_ref(a, b):
+    # partial pivoting selects P == I on dd matrices (asserted by _lu_ref
+    # elsewhere), so the pivoted library solve is directly comparable
+    return scipy_lu_solve(lu_factor(a), b)
+
+
+@pytest.mark.parametrize("graph", ["g1", "g2", "g2p"])
+@pytest.mark.parametrize(
+    "bshape,bparts",
+    [((64, 64), ((4, 4),)), ((64, 32), ((4, 2),)), ((64,), None)],
+)
+def test_lu_solve_single_level(graph, bshape, bparts):
+    a = dd_matrix(64, seed=13)
+    b = jnp.asarray(
+        np.random.default_rng(5).standard_normal(bshape).astype(np.float32)
+    )
+    x = run_lu_solve(
+        a, b, graph=graph, partitions=((4, 4),), b_partitions=bparts
+    )
+    assert x.shape == b.shape
+    np.testing.assert_allclose(
+        np.asarray(x), np.asarray(_lu_solve_ref(a, b)), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(a @ x), np.asarray(b), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("graph", ["g3", "g4", "g3flat"])
+def test_lu_solve_distributed_graphs(graph):
+    n = 64
+    a = dd_matrix(n, seed=14)
+    b = jnp.asarray(
+        np.random.default_rng(6).standard_normal((n, n)).astype(np.float32)
+    )
+    parts = ((2, 2), (2, 2)) if graph in ("g3", "g4") else ((4, 4),)
+    x = run_lu_solve(a, b, graph=graph, partitions=parts, mesh=_mesh_1d())
+    np.testing.assert_allclose(
+        np.asarray(x), np.asarray(_lu_solve_ref(a, b)), atol=1e-4
+    )
+
+
+def test_lu_solve_shape_mismatch():
+    a = dd_matrix(32, seed=1)
+    with pytest.raises(ValueError, match="mismatch"):
+        run_lu_solve(a, jnp.zeros((16, 4), jnp.float32), partitions=((2, 2),))
+
+
+def test_lu_solve_single_drain_compile_once():
+    """The whole factor+solve pipeline is ONE WaveProgram: one launch and
+    one compile on the first drain, pure replay (0 recompiles) on repeats —
+    the acceptance criterion for the composed LUSOLVE workload."""
+    clear_compile_cache()
+    n, p = 64, 4
+    stats = []
+    for seed in (1, 2, 3):
+        d = Dispatcher(graph="g2")
+        A = GData((n, n), partitions=((p, p),), dtype=jnp.float32,
+                  value=dd_matrix(n, seed=seed))
+        B = GData(
+            (n, n), partitions=((p, p),), dtype=jnp.float32,
+            value=jnp.asarray(
+                np.random.default_rng(seed)
+                .standard_normal((n, n)).astype(np.float32)
+            ),
+        )
+        utp_lu_solve(d, A, B)
+        k = d.run()
+        stats.append(
+            (k, d.executor.stats.get("launches", 0),
+             d.executor.stats.get("compiles", 0))
+        )
+    # leaf count: factor 30 (see test_repeated_lu_drains_compile_once)
+    # + forward 40 + backward 40 block-substitution tasks at p = m = 4
+    assert stats[0] == (110, 1, 1)
+    for rep in stats[1:]:
+        assert rep == (110, 1, 0)
+
+
+@pytest.mark.parametrize("graph", ["g1", "g2", "g2p"])
+def test_run_inv(graph):
+    n = 64
+    a = dd_matrix(n, seed=15)
+    inv = run_inv(a, graph=graph, partitions=((4, 4),))
+    np.testing.assert_allclose(
+        np.asarray(inv @ a), np.eye(n), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(inv), np.asarray(jnp.linalg.inv(a)), atol=1e-4
+    )
+
+
+def test_lu_solve_ops_registered_and_memoizable():
+    for name in ("trsmul", "lu_solve"):
+        op = OpRegistry.get(name)
+        assert op.memoizable  # geometry-pure splits ride the drain memo
 
 
 # --------------------------------------------------------------------------

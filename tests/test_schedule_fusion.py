@@ -21,7 +21,7 @@ from repro.core.executors import clear_compile_cache, plan_schedule
 from repro.core.executors.jit_wave import _DRAIN_MEMO
 from repro.linalg import run_cholesky, run_lu, run_lu_many
 from repro.linalg.cholesky import utp_cholesky
-from repro.linalg.lu import utp_getrf
+from repro.linalg.lu import utp_getrf, utp_lu_solve, utp_solve
 
 
 # --------------------------------------------------------------------------
@@ -167,6 +167,60 @@ def test_run_lu_many_replays_with_zero_recompiles():
         )
     # the second drain hit the drain memo (captured by the first)
     assert len(_DRAIN_MEMO) >= 1
+
+
+def test_lu_solve_overlaps_solve_groups_with_factor_groups():
+    """The composed factor+solve drain (DESIGN.md §4): ONE WaveProgram where
+    the dependency-exact pass (a) fuses solve groups into independent
+    same-signature factor groups (row-i forward substitutions share a slot
+    with step-i panel solves — unlike single-root LU, the combined DAG has
+    slack) and (b) schedules the pipeline in strictly fewer issue slots
+    than the three barrier-separated drains need in total."""
+    clear_compile_cache()
+    n, p = 64, 4
+    a = dd_matrix(n, seed=51)
+    b = jnp.asarray(
+        np.random.default_rng(7).standard_normal((n, n)).astype(np.float32)
+    )
+
+    def fresh(val):
+        return GData(val.shape, partitions=((p, p),), dtype=val.dtype, value=val)
+
+    # baseline: factor, forward solve, backward solve as separate drains
+    d1 = Dispatcher(graph="g2")
+    A1 = fresh(a)
+    utp_getrf(d1, A1)
+    d1.run()
+    packed = A1.value
+    d2 = Dispatcher(graph="g2")
+    A2, B2 = fresh(packed), fresh(b)
+    utp_solve(d2, A2, B2, lower=True)
+    d2.run()
+    d3 = Dispatcher(graph="g2")
+    A3, B3 = fresh(packed), fresh(B2.value)
+    utp_solve(d3, A3, B3, lower=False, side="left")
+    d3.run()
+    separate_slots = sum(d.executor.stats["slots"] for d in (d1, d2, d3))
+    separate_groups = sum(d.executor.stats["groups"] for d in (d1, d2, d3))
+
+    # composed: the same pipeline as ONE LUSOLVE root -> one WaveProgram
+    d = Dispatcher(graph="g2")
+    A, B = fresh(a), fresh(b)
+    utp_lu_solve(d, A, B)
+    d.run()
+    st = d.executor.stats
+    assert st["launches"] == 1
+    # solve groups fused into factor groups: single-root lu_solve has slack
+    # (contrast test_single_root_lu_is_at_its_chain_lower_bound below)
+    assert st["groups"] < st["groups_prefusion"]
+    assert st["groups"] < separate_groups
+    # overlap: solve slots interleave with late factor slots instead of
+    # queueing behind them
+    assert st["slots"] < separate_slots
+    # and the composed drain computes the same x as the staged pipeline
+    np.testing.assert_allclose(
+        np.asarray(B.value), np.asarray(B3.value), rtol=2e-4, atol=2e-4
+    )
 
 
 def test_single_root_lu_is_at_its_chain_lower_bound():
