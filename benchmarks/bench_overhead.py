@@ -103,13 +103,15 @@ def drain_stats(
     structurally repeated drain; ``mats`` may hold several root matrices
     (the multi-root drain case), and an entry may itself be a tuple of
     matrices submitted to one root (composed workloads: ``utp_lu_solve``
-    takes A and B)."""
+    takes A and B).  ``stack_roots=False`` pins the PR-3 segment-fusion
+    path: every counter gate below asserts THAT path's invariants (the
+    stacked path is measured separately by bench_serving, DESIGN.md §7)."""
     if not isinstance(mats, (list, tuple)):
         mats = [mats]
     clear_compile_cache()
     out = {}
     for which in ("first_drain", "repeat_drain"):
-        d = Dispatcher(graph=graph)
+        d = Dispatcher(graph=graph, stack_roots=False)
         for a in mats:
             group = a if isinstance(a, tuple) else (a,)
             datas = [

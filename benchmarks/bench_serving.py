@@ -1,0 +1,170 @@
+"""Batched-serving throughput: stacked vs sequential vs segment-fused.
+
+The DESIGN.md §7 acceptance benchmark, TaPS-style (throughput over a
+request sweep, not single-drain latency): N small LU requests served
+
+  (a) sequentially        — N independent drains (``run_lu`` per matrix),
+  (b) segment-fused       — ONE multi-root drain, per-root gather segments
+                            (PR-3 ``run_lu_many``),
+  (c) stacked             — ONE batched program over a pow2-padded batch
+                            axis (``run_lu_batched``, this PR).
+
+All ratios use interleaved A/B timing (``timeit_pair``, DESIGN.md §9) with
+the stacked side re-timed inside each pair, so both comparisons survive
+machine-load drift.  Also measured: the compiled-program count over an
+N=1..max sweep (must stay O(log N): one program per pow2 bucket plus the
+N=1 unstacked drain) and the ``BatchServer`` steady state (repeat ticks
+must be 0 compiles / 1 launch per signature bucket).
+
+Emits ``BENCH_serving.json`` (``--smoke``: smaller sizes, writes
+``BENCH_serving.smoke.json`` for CI's serving gate).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import Dispatcher, GData, dd_matrix
+from repro.core.executors import clear_compile_cache
+from repro.core.executors.jit_wave import drain_memo_stats
+from repro.linalg import run_lu, run_lu_batched, run_lu_many
+from repro.linalg.lu import utp_getrf
+from repro.serve import BatchServer
+
+from .common import row, timeit, timeit_pair
+
+JSON_PATH = "BENCH_serving.json"
+SMOKE_JSON_PATH = "BENCH_serving.smoke.json"
+
+
+def _mats(N: int, n: int, seed0: int = 0):
+    return [dd_matrix(n, seed=seed0 + s) for s in range(N)]
+
+
+def main(smoke: bool = False) -> None:
+    n, p = (64, 4) if smoke else (128, 4)
+    sweep_max = 16 if smoke else 64
+    batch_sizes = (1, 4, 16) if smoke else (1, 4, 16, 64)
+    warmup, iters = (1, 3) if smoke else (2, 9)
+    report = {
+        "bench": "serving",
+        "backend": jax.default_backend(),
+        "mode": "smoke" if smoke else "full",
+        "n": n,
+        "p": p,
+        "by_batch": {},
+    }
+
+    for N in batch_sizes:
+        mats = _mats(N, n)
+        clear_compile_cache()
+        # pre-capture both paths so the timed region measures the serving
+        # steady state (replays), not first-drain Python expansion
+        run_lu_batched(mats, partitions=((p, p),))
+        for m in mats:
+            run_lu(m, partitions=((p, p),))
+        run_lu_many(mats, partitions=((p, p),))
+
+        t_seq, t_stacked = timeit_pair(
+            lambda: [run_lu(m, partitions=((p, p),)) for m in mats],
+            lambda: run_lu_batched(mats, partitions=((p, p),)),
+            warmup=warmup,
+            iters=iters,
+        )
+        t_seg, t_stacked2 = timeit_pair(
+            lambda: run_lu_many(mats, partitions=((p, p),)),
+            lambda: run_lu_batched(mats, partitions=((p, p),)),
+            warmup=warmup,
+            iters=iters,
+        )
+        row(f"serve_lu_N{N}_sequential", t_seq, f"{N/t_seq:.1f}req/s")
+        row(f"serve_lu_N{N}_segment_fused", t_seg, f"{N/t_seg:.1f}req/s")
+        row(
+            f"serve_lu_N{N}_stacked",
+            t_stacked,
+            f"{N/t_stacked:.1f}req/s "
+            f"seq/stacked={t_seq/t_stacked:.2f}x "
+            f"seg/stacked={t_seg/t_stacked2:.2f}x",
+        )
+        report["by_batch"][str(N)] = {
+            "sequential_us": t_seq * 1e6,
+            "segment_fused_us": t_seg * 1e6,
+            "stacked_us": t_stacked * 1e6,
+            "stacked_us_vs_segment": t_stacked2 * 1e6,
+            "stacked_req_per_s": N / t_stacked,
+            "seq_over_stacked": t_seq / t_stacked,
+            "seg_over_stacked": t_seg / t_stacked2,
+        }
+
+    # compile-count sweep: any N in 1..sweep_max must hit one of the
+    # O(log N) bucket programs (pow2 buckets + the N=1 unstacked drain)
+    clear_compile_cache()
+    sweep_compiles = 0
+    for N in range(1, sweep_max + 1):
+        d = Dispatcher(graph="g2")
+        for m in _mats(N, n, seed0=N):
+            A = GData(m.shape, partitions=((p, p),), dtype=m.dtype, value=m)
+            utp_getrf(d, A)
+        d.run()
+        sweep_compiles += int(d.executor.stats.get("compiles", 0))
+    budget = int(math.log2(sweep_max)) + 1
+    row(
+        "serve_compile_sweep",
+        0.0,
+        f"{sweep_compiles} compiles over N=1..{sweep_max} (budget {budget})",
+    )
+    report.update(
+        sweep_max=sweep_max,
+        sweep_compiles=sweep_compiles,
+        sweep_compile_budget=budget,
+        drain_memo=drain_memo_stats(),
+    )
+
+    # BatchServer steady state: repeat ticks replay per signature bucket
+    clear_compile_cache()
+    srv = BatchServer(graph="g2")
+    rng = np.random.default_rng(0)
+    tick_n = 16 if not smoke else 8
+
+    def queue_and_tick(seed0: int):
+        for s in range(tick_n):
+            srv.lu_solve(
+                dd_matrix(n, seed=seed0 + s),
+                rng.standard_normal(n).astype(np.float32),
+            )
+        return srv.tick()
+
+    queue_and_tick(0)  # capture tick
+    reports = [queue_and_tick(100 * (i + 1)) for i in range(3)]
+    repeat_compiles = sum(r.compiles for r in reports)
+    repeat_launches = [r.launches for r in reports]
+    t_tick = timeit(lambda: queue_and_tick(rng.integers(1 << 20)),
+                    warmup=1, iters=(3 if smoke else 7))
+    row(
+        "serve_tick_lu_solve",
+        t_tick,
+        f"{tick_n/t_tick:.1f}req/s repeat_compiles={repeat_compiles}",
+    )
+    report.update(
+        tick_requests=tick_n,
+        tick_us=t_tick * 1e6,
+        tick_req_per_s=tick_n / t_tick,
+        repeat_tick_compiles=repeat_compiles,
+        repeat_tick_launches=repeat_launches,
+        server_stats=dict(srv.stats),
+    )
+
+    path = SMOKE_JSON_PATH if smoke else JSON_PATH
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -32,7 +32,7 @@ def timeit_pair(
 
     The two sides alternate within every iteration, so their *ratio* is
     robust to machine-load drift across the run — phase-separated timing
-    (timeit twice) can easily skew a ratio 2-3x on a shared box (§8)."""
+    (timeit twice) can easily skew a ratio 2-3x on a shared box (§9)."""
     for _ in range(warmup):
         jax.block_until_ready(fn_a())
         jax.block_until_ready(fn_b())

@@ -96,7 +96,7 @@ Environment: jax {jaxver} on CPU (single core); TPU v5e is the TARGET
 Production meshes: single pod (16,16)=256 chips axes ("data","model");
 multi-pod (2,16,16)=512 chips axes ("pod","data","model").
 
-Methodology notes (see DESIGN.md §8):
+Methodology notes (see DESIGN.md §9):
 * Every figure below derives from the COMPILED dry-run artifact
   (`lower().compile()`): `memory_analysis()` for HBM capacity, and a
   loop-aware re-analysis of `compiled.as_text()` for per-chip FLOPs, HBM

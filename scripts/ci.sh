@@ -63,6 +63,48 @@ if fail:
 print("compile-counter + fusion gate OK")
 EOF
 
+echo "== serving smoke: bench_serving --smoke (writes BENCH_serving.smoke.json) =="
+python -m benchmarks.bench_serving --smoke
+
+echo "== gate: batched-serving stacking regressions =="
+python - <<'EOF'
+import json, sys
+
+r = json.load(open("BENCH_serving.smoke.json"))
+fail = []
+# O(log N) compiled programs across the batch-size sweep: one per pow2
+# bucket plus the N=1 unstacked drain (DESIGN.md §7)
+if r["sweep_compiles"] > r["sweep_compile_budget"]:
+    fail.append(
+        f"compile sweep: {r['sweep_compiles']} compiles over "
+        f"N=1..{r['sweep_max']} (budget {r['sweep_compile_budget']})"
+    )
+# serving steady state: a structurally repeated tick is pure replay —
+# zero recompiles, one launch per signature bucket
+if r["repeat_tick_compiles"] != 0:
+    fail.append(f"repeat ticks recompiled ({r['repeat_tick_compiles']})")
+if any(l != 1 for l in r["repeat_tick_launches"]):
+    fail.append(f"repeat tick launches {r['repeat_tick_launches']} != 1 each")
+# throughput: at N=16 the stacked drain must beat 16 sequential drains
+# (interleaved same-box timing; the segment-fused comparison is reported
+# but not gated — it legitimately wins at small N on CPU)
+n16 = r["by_batch"]["16"]
+if n16["seq_over_stacked"] < 1.0:
+    fail.append(
+        f"stacked N=16 slower than sequential: "
+        f"{n16['seq_over_stacked']:.2f}x"
+    )
+if fail:
+    print("SERVING GATE FAILED:\n  " + "\n  ".join(fail))
+    sys.exit(1)
+print(
+    f"serving gate OK (sweep {r['sweep_compiles']}/"
+    f"{r['sweep_compile_budget']} compiles, N=16 stacked "
+    f"{n16['seq_over_stacked']:.2f}x over sequential, "
+    f"{n16['seg_over_stacked']:.2f}x over segment-fused)"
+)
+EOF
+
 echo "== examples smoke (executable documentation) =="
 python examples/quickstart.py 64 4 2
 python examples/lu_solve.py 64 4 2
@@ -108,6 +150,8 @@ EOF
 if [[ "${1:-}" == "--full" ]]; then
   echo "== full bench_overhead (writes BENCH_overhead.json) =="
   python -m benchmarks.bench_overhead
+  echo "== full bench_serving (writes BENCH_serving.json) =="
+  python -m benchmarks.bench_serving
   echo "== full benchmark suite =="
   python -m benchmarks.run
 fi

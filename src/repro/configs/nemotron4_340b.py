@@ -5,7 +5,7 @@
 
 head_dim=192, squared-ReLU (non-gated) MLP, LayerNorm, RoPE theta 10k.
 The memory/collective stress test of the pool: 340B params demand FSDP
-over the full data axis and bf16 optimizer moments (DESIGN.md §7).
+over the full data axis and bf16 optimizer moments (DESIGN.md §8).
 Full attention -> ``long_500k`` skipped.
 """
 

@@ -42,6 +42,39 @@ def from_grid(a4: jnp.ndarray) -> jnp.ndarray:
 # drains; the traced executor code uses the plain functions above).
 _to_grid_jit = jax.jit(to_grid, static_argnums=(1, 2))
 _from_grid_jit = jax.jit(from_grid)
+# lane extraction from a stacked (B, nr, nc, br, bc) epoch grid: the lane
+# index is a traced argument, so every lane of every batch shares ONE
+# compiled slice+de-grid program regardless of which lane is read.
+_from_grid_lane_jit = jax.jit(lambda g, i: from_grid(g[i]))
+
+
+class StackedEpoch:
+    """Shared result holder for one stacked (batched) drain — DESIGN.md §7.
+
+    When the dispatcher stacks N structurally identical roots into one
+    batched WaveProgram, the program's output per root slot is a single
+    ``(B, nr, nc, br, bc)`` stacked grid.  Splitting it eagerly back into N
+    per-root grids would reintroduce the per-root data movement the stacking
+    removed, so instead every member ``GData`` adopts a *lane* of this shared
+    epoch: reading a member's ``.value`` (or re-entering its grid epoch)
+    extracts its lane lazily.  The epoch object dies when the last member
+    resolves or re-adopts elsewhere.
+    """
+
+    __slots__ = ("grid", "block", "holders")
+
+    def __init__(self, grid: jnp.ndarray, block: Tuple[int, int]):
+        self.grid = grid  # (B, nr, nc, br, bc), device-resident
+        self.block = tuple(block)
+        # live lane holders: executors may DONATE this grid back into the
+        # next stacked program only when every holder is re-adopted in that
+        # same drain (otherwise a bystander lane would read a donated
+        # buffer) — see JitWaveExecutor._stack_grids
+        self.holders = 0
+
+    @property
+    def batch(self) -> int:
+        return self.grid.shape[0]
 
 
 @dataclass(frozen=True)
@@ -91,6 +124,9 @@ class GData:
         # ``_value`` is stale; reading ``.value`` de-grids lazily.
         self._grid: Optional[jnp.ndarray] = None
         self._grid_block: Optional[Tuple[int, int]] = None
+        # Stacked-epoch lane (DESIGN.md §7): while set, the authoritative
+        # bytes are one lane of a shared StackedEpoch grid; resolved lazily.
+        self._lane: Optional[Tuple[StackedEpoch, int]] = None
         # Copy on ingest: executors may donate (destroy) the root buffer, so
         # GData must own its storage rather than alias a caller's array.
         self.value = None if value is None else jnp.array(value, dtype=dtype)
@@ -109,7 +145,13 @@ class GData:
     @property
     def value(self) -> Optional[jnp.ndarray]:
         """Root-layout array.  Reading from inside a grid epoch de-grids
-        lazily and ends the epoch (the next drain re-enters it)."""
+        lazily and ends the epoch (the next drain re-enters it); reading
+        from a stacked-epoch lane extracts + de-grids that lane."""
+        if self._lane is not None:
+            ep, i = self._lane
+            self._drop_lane()
+            self._value = _from_grid_lane_jit(ep.grid, i)
+            return self._value
         if self._grid is not None:
             self._value = _from_grid_jit(self._grid)
             self._grid = None
@@ -120,11 +162,50 @@ class GData:
     def value(self, v: Optional[jnp.ndarray]) -> None:
         self._grid = None
         self._grid_block = None
+        self._drop_lane()
         self._value = v
+
+    def _drop_lane(self) -> None:
+        if self._lane is not None:
+            self._lane[0].holders -= 1
+            self._lane = None
 
     @property
     def in_grid_epoch(self) -> bool:
         return self._grid is not None
+
+    @property
+    def has_value(self) -> bool:
+        """True when authoritative bytes exist in ANY epoch (root-layout
+        value, resident grid, or stacked-epoch lane)."""
+        return (
+            self._value is not None
+            or self._grid is not None
+            or self._lane is not None
+        )
+
+    @property
+    def lane(self) -> Optional[Tuple["StackedEpoch", int]]:
+        """(epoch, lane index) while lane-resident, else None."""
+        return self._lane
+
+    def adopt_lane(self, epoch: StackedEpoch, lane: int) -> None:
+        """Adopt lane ``lane`` of a stacked drain's result grid (DESIGN.md
+        §7).  The shared epoch becomes the single authority for this datum;
+        nothing is sliced or de-gridded until someone reads ``.value`` or
+        re-enters a per-datum grid epoch."""
+        nr, nc, br, bc = epoch.grid.shape[1:]
+        want = (nr * br, nc * bc)
+        if want != tuple(self.shape):
+            raise ValueError(
+                f"{self.name}: stacked lane shape {want} != {self.shape}"
+            )
+        self._grid = None
+        self._grid_block = None
+        self._value = None
+        self._drop_lane()
+        self._lane = (epoch, lane)
+        epoch.holders += 1
 
     @property
     def grid_block(self) -> Optional[Tuple[int, int]]:
@@ -144,7 +225,15 @@ class GData:
             )
         if self._grid is not None and self._grid_block == (br, bc):
             return self._grid
-        v = self.value  # flushes any differently-blocked resident grid
+        if self._lane is not None and self._lane[0].block == (br, bc):
+            # lane-resident with the right block shape: slice the lane out
+            # of the stacked epoch directly, no root-layout round trip
+            ep, i = self._lane
+            self._drop_lane()
+            self._grid = ep.grid[i]
+            self._grid_block = (br, bc)
+            return self._grid
+        v = self.value  # flushes any differently-blocked resident grid/lane
         if v is None:
             raise ValueError(f"{self.name}: cannot enter grid epoch, no value")
         self._grid = _to_grid_jit(jnp.asarray(v, dtype=self.dtype), br, bc)

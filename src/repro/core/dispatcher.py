@@ -43,16 +43,43 @@ def _make_executor(graph: TaskFlowGraph, mesh, on_finished) -> Executor:
     return JitWaveExecutor(on_task_finished=on_finished)
 
 
+class _StackedAbort(Exception):
+    """Raised when a collect-mode expansion hits a value-dependent
+    (non-memoizable) split: such an expansion may read values that earlier
+    leaf scopes would have computed, and in collect mode nothing has
+    executed yet — the stacked path must abort BEFORE that split runs and
+    redo the drain through the normal interleaved expand/execute path."""
+
+
 class Dispatcher:
-    def __init__(self, graph="g2", mesh=None, memoize_drains: bool = True):
+    def __init__(
+        self,
+        graph="g2",
+        mesh=None,
+        memoize_drains: bool = True,
+        stack_roots: bool = True,
+    ):
         self.graph = get_graph(graph) if isinstance(graph, str) else graph
         self.mesh = mesh
         self.executor = _make_executor(self.graph, mesh, self._on_finished)
         self.memoize_drains = memoize_drains
+        # Homogeneous-root stacking (DESIGN.md §7): a drain whose root
+        # stream is N structurally identical, data-disjoint tasks runs as
+        # ONE batched program over a pow2-padded batch axis instead of N
+        # fused per-root segments.  ``stack_roots=False`` pins the PR-3
+        # segment-fusion behaviour (the comparison baseline).
+        self.stack_roots = stack_roots
         self._pending_roots: List[GTask] = []
         self._capture_valid = True
         self.finished_count = 0
-        self.stats: Dict[str, int] = {"submitted": 0, "split": 0, "waves": 0}
+        self.stats: Dict[str, int] = {
+            "submitted": 0,
+            "split": 0,
+            "waves": 0,
+            "memo_hits": 0,
+            "memo_misses": 0,
+            "stacked_drains": 0,
+        }
 
     # -- paper-facing API ------------------------------------------------------
     def submit_task(self, task: GTask) -> None:
@@ -79,13 +106,24 @@ class Dispatcher:
         this is what makes repeated drains (training steps, iterative
         solvers, benchmark sweeps) cost one compiled-program dispatch.
         """
+        # Homogeneous-root stacking (DESIGN.md §7): N structurally identical
+        # roots drain as ONE batched program over a pow2-bucketed batch
+        # axis; the returned leaf count is then the TEMPLATE's (each leaf
+        # computes all N lanes at once).  Heterogeneous streams keep the
+        # PR-3 path: per-root expansion + cross-root segment fusion.
         roots, self._pending_roots = self._pending_roots, []
         before = self.finished_count
+        if self.stack_roots and self._stackable(roots):
+            if self._run_stacked(roots):
+                return self.finished_count - before
         key = self._drain_memo_key(roots)
         memo = _DRAIN_MEMO.get(key) if key is not None else None
         if memo is not None:
+            self.stats["memo_hits"] += 1
             self._replay_drain(memo, roots)
             return self.finished_count - before
+        if key is not None:
+            self.stats["memo_misses"] += 1
         capturing = key is not None
         if capturing:
             slot_of = {
@@ -105,6 +143,134 @@ class Dispatcher:
                     "waves": self.stats["waves"] - stats_before[1],
                 }
         return self.finished_count - before
+
+    # -- homogeneous-root stacking (DESIGN.md §7) ------------------------------
+    def _stackable(self, roots: List[GTask]) -> bool:
+        """True iff the root stream is a batch of structurally identical,
+        data-disjoint tasks the executor can stack (DESIGN.md §7): same
+        operation singleton, same per-arg geometry (region, level, shape,
+        dtype, partitions, mode), every argument datum private to its root,
+        and a local (non-distributed, capture-capable) executor."""
+        if len(roots) < 2:
+            return False
+        if self.graph.distributed or not hasattr(
+            self.executor, "execute_stacked"
+        ):
+            return False
+        t = roots[0]
+        if not t.op.memoizable:
+            return False
+        seen_ids = set()
+        for r in roots:
+            if r.op is not t.op or len(r.args) != len(t.args):
+                return False
+            for v, tv, m, tm in zip(r.args, t.args, r.modes, t.modes):
+                d, td = v.data, tv.data
+                if (
+                    m is not tm
+                    or v.region != tv.region
+                    or v.level != tv.level
+                    or d.shape != td.shape
+                    or jnp.dtype(d.dtype) != jnp.dtype(td.dtype)
+                    or tuple(d.partitions) != tuple(td.partitions)
+                ):
+                    return False
+                if d.id in seen_ids or not d.has_value:
+                    return False
+                seen_ids.add(d.id)
+        return True
+
+    def _stacked_members(self, roots: List[GTask]) -> List[List]:
+        """Per template root slot, the member data handles across requests
+        (template = roots[0]; slot order = first-appearance arg order)."""
+        arg_pos: List[int] = []
+        seen = set()
+        for j, v in enumerate(roots[0].args):
+            if v.data.id not in seen:
+                seen.add(v.data.id)
+                arg_pos.append(j)
+        return [[r.args[j].data for r in roots] for j in arg_pos]
+
+    def _run_stacked(self, roots: List[GTask]) -> bool:
+        """Drain a homogeneous root stream as ONE batched program set.
+
+        Only the TEMPLATE root (roots[0]) is expanded — splitting is a pure
+        function of geometry, and all roots share it.  The batch count is
+        padded to a pow2 bucket, so any N hits one of O(log N) compiled
+        programs and the drain-memo key is independent of the exact N.
+        Falls back internally (template schedules as plain programs +
+        remaining roots as a normal sub-drain) when the executor cannot
+        take the whole-program stacked path; always returns True once the
+        drain has been handled."""
+        template = roots[0]
+        n = len(roots)
+        bucket = 1
+        while bucket < n:
+            bucket *= 2
+        before = self.finished_count
+        base_key = self._drain_memo_key([template])
+        key = None if base_key is None else base_key + (("stacked", bucket),)
+        memo = _DRAIN_MEMO.get(key) if key is not None else None
+        members = self._stacked_members(roots)
+        if memo is not None:
+            self.stats["memo_hits"] += 1
+            self.stats["stacked_drains"] += 1
+            for rec in memo["records"]:
+                self.executor.replay_program(
+                    rec, [members[s] for s in rec.root_slots]
+                )
+            for t in roots:
+                t.state = TaskState.FINISHED
+            self.stats["split"] += memo["split"]
+            self.stats["waves"] += memo["waves"]
+            self.finished_count += memo["leaf_total"]
+            return True
+        capturing = key is not None
+        stats_before = (self.stats["split"], self.stats["waves"])
+        if capturing:
+            self.stats["memo_misses"] += 1
+            slot_of = {
+                d.id: i for i, d in enumerate(self._root_datas([template]))
+            }
+            self.executor.begin_capture(slot_of)
+            self._capture_valid = True
+        schedules: List[tuple] = []
+        try:
+            self._process_scope([template], level=0, collect=schedules)
+        except _StackedAbort:
+            done = None
+        else:
+            slot_datas = self._root_datas([template])
+            member_of = {d.id: ms for d, ms in zip(slot_datas, members)}
+            done = self.executor.execute_stacked(schedules, member_of, bucket)
+        if done is None:
+            # stacked path unavailable (non-grid-uniform schedule, or a
+            # value-dependent split aborted the collect): discard the
+            # template pre-expansion (its orphaned children never execute)
+            # and redo the WHOLE drain through the normal path — all roots
+            # in one scope, so cross-root segment fusion is kept.  No memo
+            # for this drain (the template stats were rolled back, and the
+            # root-level capture window has already been consumed).
+            if capturing:
+                self.executor.end_capture()
+            self.stats["split"], self.stats["waves"] = stats_before
+            self._process_scope(roots, level=0)
+            for t in roots:
+                t.state = TaskState.FINISHED
+            return True
+        self.stats["stacked_drains"] += 1
+        if capturing:
+            records, ok = self.executor.end_capture()
+            if ok and self._capture_valid:
+                _DRAIN_MEMO[key] = {
+                    "records": records,
+                    "leaf_total": self.finished_count - before,
+                    "split": self.stats["split"] - stats_before[0],
+                    "waves": self.stats["waves"] - stats_before[1],
+                }
+        for t in roots:
+            t.state = TaskState.FINISHED
+        return True
 
     @staticmethod
     def _root_datas(roots: List[GTask]) -> List:
@@ -177,7 +343,9 @@ class Dispatcher:
             parent.state = TaskState.FINISHED
             parent = parent.parent
 
-    def _process_scope(self, tasks: List[GTask], level: int) -> None:
+    def _process_scope(
+        self, tasks: List[GTask], level: int, collect: Optional[List] = None
+    ) -> None:
         if not tasks:
             return
         tracker = DepTracker()
@@ -189,13 +357,18 @@ class Dispatcher:
         if level >= leaf_level:
             # hand over the exact task DAG, not just the level schedule:
             # the executor's scheduling pass issues dependency-exactly and
-            # fuses groups across former wave boundaries (DESIGN.md §2)
-            self.executor.execute_schedule(waves, tracker.dag())
+            # fuses groups across former wave boundaries (DESIGN.md §2).
+            # ``collect`` gathers the leaf schedules instead of executing
+            # (the stacked drain path plans them all before running any)
+            if collect is not None:
+                collect.append((waves, tracker.dag()))
+            else:
+                self.executor.execute_schedule(waves, tracker.dag())
             return
         for wave in waves:
             children: List[GTask] = []
 
-            def collect(child: GTask) -> None:
+            def submit_child(child: GTask) -> None:
                 if child.parent is not None:
                     child.parent.add_child(child)
                 child.state = TaskState.SUBMITTED
@@ -204,15 +377,20 @@ class Dispatcher:
             for t in wave:
                 if t.op.can_split(t):
                     if not t.op.memoizable:
+                        if collect is not None:
+                            # collect mode defers all execution, but a
+                            # value-dependent split may read values earlier
+                            # leaf scopes produce — abort BEFORE it runs
+                            raise _StackedAbort()
                         # value-dependent expansion somewhere below a
                         # memoizable root: this drain must not be replayed
                         self._capture_valid = False
                     t.state = TaskState.SPLIT
                     self.stats["split"] += 1
-                    t.op.split(t, collect)
+                    t.op.split(t, submit_child)
                     if not t.children:
                         # degenerate split (e.g. 1x1 partition): run as leaf
                         children.append(t)
                 else:
                     children.append(t)
-            self._process_scope(children, level + 1)
+            self._process_scope(children, level + 1, collect)

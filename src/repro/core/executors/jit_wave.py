@@ -13,6 +13,12 @@ across roots), one Python dispatch per drain; roots stay in
 ``(nr, nc, br, bc)`` layout for the epoch, and repeated drains with the
 same schedule structure reuse one compiled program.
 
+Stacked path (``execute_stacked``, DESIGN.md §7): a homogeneous root
+stream runs ONE batched program over ``(B, nr, nc, br, bc)`` stacked grids
+with B padded to a pow2 bucket — compiled programs and the drain memo key
+depend on the bucket, never on the exact request count, and results hand
+back as lazily extracted lanes of a shared ``StackedEpoch``.
+
 Fallback path (``execute_wave``/``_run_group``): per-wave-group jitted
 launches with the grid-reshape gather/scatter, used when the schedule is
 not grid-uniform (mixed block shapes or unaligned regions on one root).
@@ -23,6 +29,7 @@ wave of the same kind reuses the compiled program.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -30,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..data import GData, from_grid, to_grid
+from ..data import GData, StackedEpoch, from_grid, to_grid
 from ..task import GTask, TaskState
 from .base import Executor, group_wave
 from .wave_program import SchedulePlan, build_program, plan_schedule
@@ -43,12 +50,89 @@ from .wave_program import SchedulePlan, build_program, plan_schedule
 # WavePrograms ("waveprog", ...).
 _GROUP_FN_CACHE: Dict[tuple, callable] = {}
 
-# drain memo (DESIGN.md §2): structural root-task-stream key -> the captured
-# sequence of compiled program executions for a whole dispatcher drain, so a
-# structurally repeated drain skips Python re-splitting/re-versioning and
-# replays the programs directly.  Owned here (not in dispatcher.py) so one
-# clear call drops every compiled artifact.
-_DRAIN_MEMO: Dict[tuple, object] = {}
+class DrainMemo:
+    """Bounded LRU drain memo with hit/miss/eviction counters (DESIGN.md §2).
+
+    Structural root-task-stream key -> the captured sequence of compiled
+    program executions for a whole dispatcher drain, so a structurally
+    repeated drain skips Python re-splitting/re-versioning and replays the
+    programs directly.  A long-running server sees an unbounded stream of
+    distinct request signatures, so the memo must not grow without bound:
+    entries evict least-recently-used past ``capacity`` (an evicted drain is
+    simply re-captured on its next occurrence — correctness is unaffected).
+    Counters feed ``Dispatcher.stats`` and the serving tick reports.
+    """
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._entries: "OrderedDict[tuple, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: tuple):
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry
+
+    def __setitem__(self, key: tuple, entry: object) -> None:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def set_capacity(self, capacity: int) -> None:
+        if capacity < 1:
+            raise ValueError(f"drain memo capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "entries": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
+
+    # dict-compatible surface (tests introspect the memo directly)
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def values(self):
+        return self._entries.values()
+
+    def keys(self):
+        return self._entries.keys()
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+# owned here (not in dispatcher.py) so one clear call drops every compiled
+# artifact; counters are process-global like the compiled-program cache
+_DRAIN_MEMO = DrainMemo()
+
+
+def set_drain_memo_capacity(capacity: int) -> None:
+    """Configure the LRU bound of the process-global drain memo."""
+    _DRAIN_MEMO.set_capacity(capacity)
+
+
+def drain_memo_stats() -> Dict[str, int]:
+    """Entries/capacity/hits/misses/evictions of the global drain memo."""
+    return _DRAIN_MEMO.stats()
 
 
 def clear_compile_cache() -> None:
@@ -64,7 +148,9 @@ class ProgramRecord:
     ``root_slots`` index into the drain's root-argument data order; the
     dispatcher resolves them to fresh ``GData`` objects on replay.
     ``idxs`` is the plan's device-resident flat index array — replay reuses
-    it as-is, no host concatenation or transfer."""
+    it as-is, no host concatenation or transfer.  ``batch`` is the stacked
+    pow2 bucket for batched drains (DESIGN.md §7): replay then resolves each
+    slot to the LIST of member data handles to restack."""
 
     fn: object  # the jitted WaveProgram
     root_slots: Tuple[int, ...]
@@ -74,6 +160,7 @@ class ProgramRecord:
     n_groups: int = 0  # fused launch count inside the program
     n_groups_prefusion: int = 0  # barrier-wave group count before fusion
     n_slots: int = 0  # dependency-exact issue slots
+    batch: Optional[int] = None  # stacked bucket size (None = unstacked)
 
 
 class JitWaveExecutor(Executor):
@@ -112,12 +199,22 @@ class JitWaveExecutor(Executor):
         self._capture_ids = {}
         return records or [], ok and bool(records)
 
-    def replay_program(self, rec: ProgramRecord, datas: List[GData]) -> int:
-        """Re-execute a captured program against fresh data handles."""
-        grids, _ = self._enter_grids(datas, rec.blocks)
-        outs = rec.fn(grids, rec.idxs)
-        for data, g in zip(datas, outs):
-            data.set_grid(g)
+    def replay_program(self, rec: ProgramRecord, datas: List) -> int:
+        """Re-execute a captured program against fresh data handles.
+
+        For a stacked record (``rec.batch``) each entry of ``datas`` is the
+        LIST of member handles for that root slot; they are restacked (with
+        pow2 padding) and the per-lane results handed back as lanes of a
+        shared ``StackedEpoch`` (DESIGN.md §7)."""
+        if rec.batch is not None:
+            grids = self._stack_grids(datas, rec.blocks, rec.batch)
+            outs = rec.fn(grids, rec.idxs)
+            self._adopt_stacked(datas, outs, rec.blocks)
+        else:
+            grids, _ = self._enter_grids(datas, rec.blocks)
+            outs = rec.fn(grids, rec.idxs)
+            for data, g in zip(datas, outs):
+                data.set_grid(g)
         self.stats["tasks"] += rec.n_tasks
         self.stats["launches"] += 1
         self.stats["groups"] += rec.n_groups
@@ -144,6 +241,84 @@ class JitWaveExecutor(Executor):
     def execute_waves(self, waves: List[List[GTask]]) -> int:
         return self.execute_schedule(waves)
 
+    # -- stacked (batched) drain path (DESIGN.md §7) ---------------------------
+    def execute_stacked(
+        self,
+        schedules: List[tuple],
+        members: Dict[int, List[GData]],
+        bucket: int,
+    ) -> Optional[int]:
+        """Run a homogeneous-root drain as ONE batched program per schedule.
+
+        ``schedules`` is the TEMPLATE root's list of leaf ``(waves, dag)``
+        schedules; ``members`` maps each template root-argument data id to
+        the per-request member handles (template first).  Every schedule is
+        planned up front: if ANY falls off the whole-program path (non-
+        grid-uniform), returns None WITHOUT executing anything, so the
+        caller can fall back to segment fusion with no partial state.
+        """
+        plans = []
+        for waves, dag in schedules:
+            waves = [w for w in waves if w]
+            if not waves:
+                continue
+            plan = plan_schedule(waves, dag)
+            if plan is None or any(
+                d not in members for d in plan.roots_order
+            ):
+                return None
+            plans.append(plan)
+        n = 0
+        for plan in plans:
+            n += self._run_program(plan, stack=(members, bucket))
+        return n
+
+    def _stack_grids(
+        self,
+        member_lists: Sequence[List[GData]],
+        blocks: Sequence[Tuple[int, int]],
+        bucket: int,
+    ) -> Tuple[jnp.ndarray, ...]:
+        """Per root slot, stack the members' resident grids into one
+        ``(bucket, nr, nc, br, bc)`` array, padding the batch by repeating
+        the last member (lanes are independent, so padding lanes compute
+        junk that is never read back).
+
+        Repeat-tick fast path: when the members are exactly lanes 0..N-1 of
+        one prior StackedEpoch with the same block and bucket — and they
+        are that epoch's ONLY live holders, so donating its grid into the
+        next program cannot invalidate a bystander lane — the grid is
+        reused as-is: zero per-request data movement between ticks."""
+        out: List[jnp.ndarray] = []
+        for members, (br, bc) in zip(member_lists, blocks):
+            first = members[0].lane
+            if (
+                first is not None
+                and first[0].block == (br, bc)
+                and first[0].batch == bucket
+                and first[0].holders == len(members)
+                and all(
+                    m.lane is not None
+                    and m.lane[0] is first[0]
+                    and m.lane[1] == i
+                    for i, m in enumerate(members)
+                )
+            ):
+                out.append(first[0].grid)
+                continue
+            gs = [m.enter_grid(br, bc) for m in members]
+            gs = gs + [gs[-1]] * (bucket - len(gs))
+            out.append(jnp.stack(gs))
+        return tuple(out)
+
+    @staticmethod
+    def _adopt_stacked(member_lists, outs, blocks) -> None:
+        """Hand each member its lane of the stacked result grids."""
+        for members, g, (br, bc) in zip(member_lists, outs, blocks):
+            epoch = StackedEpoch(g, (br, bc))
+            for i, m in enumerate(members):
+                m.adopt_lane(epoch, i)
+
     def _prepare_roots(self, waves: Sequence[Sequence[GTask]]) -> None:
         """Hook: place/distribute roots before planning (ShardExecutor)."""
 
@@ -166,26 +341,44 @@ class JitWaveExecutor(Executor):
             shardings.append(sh)
         return tuple(grids), tuple(shardings)
 
-    def _run_program(self, plan: SchedulePlan) -> int:
+    def _run_program(self, plan: SchedulePlan, stack=None) -> int:
+        """Compile-or-fetch and run one planned program.  With ``stack =
+        (members, bucket)`` the plan is traced in stacked form over
+        ``(bucket, nr, nc, br, bc)`` grids (DESIGN.md §7): the compiled
+        program and its cache key depend on the pow2 bucket, never on the
+        exact request count."""
         datas = [plan.datas[d] for d in plan.roots_order]
-        grids, shardings = self._enter_grids(datas, plan.blocks)
+        batch = None
+        if stack is not None:
+            members, batch = stack
+            member_lists = [members[d] for d in plan.roots_order]
+            grids = self._stack_grids(member_lists, plan.blocks, batch)
+            shardings = tuple(None for _ in datas)
+        else:
+            grids, shardings = self._enter_grids(datas, plan.blocks)
         out_shardings = (
             shardings if all(s is not None for s in shardings) else None
         )
         key = (
             "waveprog",
+            batch,
             self.memo_key_extra(),
             tuple(str(s) for s in shardings),
         ) + plan.key
         fn = self._fn_cache.get(key)
         if fn is None:
-            fn = build_program(plan, self.backend, self.donate, out_shardings)
+            fn = build_program(
+                plan, self.backend, self.donate, out_shardings, batch=batch
+            )
             self._fn_cache[key] = fn
             self.stats["compiles"] += 1
         idxs = plan.flat_idxs  # built once at plan time, device-resident
         outs = fn(grids, idxs)
-        for data, g in zip(datas, outs):
-            data.set_grid(g)
+        if stack is not None:
+            self._adopt_stacked(member_lists, outs, plan.blocks)
+        else:
+            for data, g in zip(datas, outs):
+                data.set_grid(g)
         if self._capture is not None:
             slots = tuple(self._capture_ids.get(d, -1) for d in plan.roots_order)
             if -1 in slots:
@@ -201,6 +394,7 @@ class JitWaveExecutor(Executor):
                         plan.n_groups,
                         plan.n_groups_prefusion,
                         plan.n_slots,
+                        batch,
                     )
                 )
         for t in plan.tasks:

@@ -46,7 +46,11 @@ grid kernel (``Operation.grid_fused_fn`` — Pallas scalar-prefetch gather/
 compute/scatter aliased to the written grid).  Group sizes are exact, never
 padded — also after fusion: every group is traced inline into one program,
 so pow2 bucketing would buy no compile savings, and duplicate trailing
-indices are unsound for read-write fused kernels.
+indices are unsound for read-write fused kernels.  (The *batch* axis of a
+stacked drain is different: ``build_program(batch=B)`` pads B to a pow2
+bucket upstream, because B is a jit shape every program specializes on —
+DESIGN.md §7; lanes are whole independent workloads, so padding lanes
+never alias real writes.)
 """
 
 from __future__ import annotations
@@ -258,7 +262,7 @@ def plan_schedule(
             for v in t.args:
                 d = v.data
                 if d.id not in datas:
-                    if not d.in_grid_epoch and d._value is None:
+                    if not d.has_value:
                         return None
                     roots_order.append(d.id)
                     datas[d.id] = d
@@ -328,8 +332,19 @@ def build_program(
     backend: str,
     donate: bool,
     out_shardings=None,
+    batch: Optional[int] = None,
 ):
     """Trace ``plan`` into one jitted fn: (grids, idx_array) -> grids'.
+
+    With ``batch=B`` the SAME plan is traced in stacked form (DESIGN.md §7):
+    every root grid carries a leading batch dimension ``(B, nr, nc, br, bc)``
+    holding B structurally identical workloads, gathers pull ``(B, size)``
+    blocks per group and flatten the two batch axes into one stack for the
+    operation's batched leaf (so leaves need no batch awareness beyond the
+    existing stacked-tiles convention), and the Pallas fused grid kernels
+    run with a leading batch grid dimension.  The block-index array is the
+    per-lane one, shared by all lanes — launch count and index traffic stay
+    flat in B.
 
     Groups are traced slot by slot in lookahead order.  Per group: the
     operation's fused grid kernel (single-segment groups only) or gather ->
@@ -387,27 +402,51 @@ def build_program(
                 off = 0
                 for slots_, ssize in segments:
                     ix = gidx[a][off : off + ssize]
-                    chunks.append(grids[slots_[a]][ix[:, 0], ix[:, 1]])
+                    g = grids[slots_[a]]
+                    if batch is None:
+                        chunks.append(g[ix[:, 0], ix[:, 1]])
+                    else:
+                        chunks.append(g[:, ix[:, 0], ix[:, 1]])
                     off += ssize
-                blocks.append(
+                stack = (
                     chunks[0]
                     if len(chunks) == 1
-                    else jnp.concatenate(chunks, axis=0)
+                    else jnp.concatenate(chunks, axis=0 if batch is None else 1)
                 )
+                if batch is not None:
+                    # flatten (B, group) into one leaf stack: the batched
+                    # leaf is elementwise over the stack, so lane order only
+                    # has to match the un-flatten below
+                    stack = stack.reshape((batch * size,) + stack.shape[2:])
+                blocks.append(stack)
             outs = fn(*blocks)
             if not isinstance(outs, (tuple, list)):
                 outs = (outs,)
             for out, a in zip(outs, write_pos):
+                if batch is not None:
+                    out = out.reshape((batch, size) + out.shape[1:])
                 off = 0
                 for slots_, ssize in segments:
                     r = slots_[a]
                     ix = gidx[a][off : off + ssize]
-                    part = (
-                        out if len(segments) == 1 else out[off : off + ssize]
-                    )
-                    grids[r] = grids[r].at[ix[:, 0], ix[:, 1]].set(
-                        part.astype(dtypes[r])
-                    )
+                    if batch is None:
+                        part = (
+                            out
+                            if len(segments) == 1
+                            else out[off : off + ssize]
+                        )
+                        grids[r] = grids[r].at[ix[:, 0], ix[:, 1]].set(
+                            part.astype(dtypes[r])
+                        )
+                    else:
+                        part = (
+                            out
+                            if len(segments) == 1
+                            else out[:, off : off + ssize]
+                        )
+                        grids[r] = grids[r].at[:, ix[:, 0], ix[:, 1]].set(
+                            part.astype(dtypes[r])
+                        )
                     off += ssize
         return tuple(grids)
 

@@ -370,6 +370,13 @@ def make_grid_fused(tile_fn, arity: int, write_arg: int):
     ``tile_fn(*tiles) -> tile`` is the pure per-tile body; ``write_arg`` is
     the argument whose grid receives the result (and whose blocks the output
     aliases).  Returns ``call(idxs, grids, *, interpret=None) -> new grid``.
+
+    ``call`` accepts either resident single-workload grids
+    ``(nr, nc, br, bc)`` or *stacked* grids ``(B, nr, nc, br, bc)`` holding B
+    structurally identical workloads (DESIGN.md §7): the stacked form runs
+    the same kernel body under a leading batch grid dimension — grid
+    ``(B, n)`` — with the per-lane block-index array shared by every lane,
+    so a batch of B costs one launch and no extra index traffic.
     """
 
     def kernel(*refs):
@@ -378,10 +385,23 @@ def make_grid_fused(tile_fn, arity: int, write_arg: int):
         out = tile_fn(*(r[0, 0] for r in in_refs))
         o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
 
+    def kernel_stacked(*refs):
+        in_refs = refs[arity : 2 * arity]
+        o_ref = refs[2 * arity]
+        out = tile_fn(*(r[0, 0, 0] for r in in_refs))
+        o_ref[0, 0, 0, :, :] = out.astype(o_ref.dtype)
+
     def _imap(a: int):
         def imap(i, *idx_refs):
             r = idx_refs[a]
             return (r[i, 0], r[i, 1], 0, 0)
+
+        return imap
+
+    def _imap_stacked(a: int):
+        def imap(b, i, *idx_refs):
+            r = idx_refs[a]
+            return (b, r[i, 0], r[i, 1], 0, 0)
 
         return imap
 
@@ -390,21 +410,28 @@ def make_grid_fused(tile_fn, arity: int, write_arg: int):
         n = idxs[0].shape[0]
         from jax.experimental.pallas import tpu as pltpu
 
+        stacked = grids[write_arg].ndim == 5
+        if stacked:
+            grid = (grids[write_arg].shape[0], n)
+            body, imap_of, lead = kernel_stacked, _imap_stacked, (1, 1, 1)
+        else:
+            grid = (n,)
+            body, imap_of, lead = kernel, _imap, (1, 1)
         in_specs = [
-            pl.BlockSpec((1, 1) + grids[a].shape[2:], _imap(a))
+            pl.BlockSpec(lead + grids[a].shape[-2:], imap_of(a))
             for a in range(arity)
         ]
         spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=arity,
-            grid=(n,),
+            grid=grid,
             in_specs=in_specs,
             out_specs=pl.BlockSpec(
-                (1, 1) + grids[write_arg].shape[2:], _imap(write_arg)
+                lead + grids[write_arg].shape[-2:], imap_of(write_arg)
             ),
         )
         wg = grids[write_arg]
         return pl.pallas_call(
-            kernel,
+            body,
             grid_spec=spec,
             out_shape=jax.ShapeDtypeStruct(wg.shape, wg.dtype),
             input_output_aliases={arity + write_arg: 0},

@@ -136,7 +136,36 @@ def run_lu_many(
     as its own root task, the scheduler interleaves the independent task
     DAGs, and the dependency-exact fusion pass merges their same-signature
     groups into shared batched launches — one compiled program, one
-    dispatch, for the whole set (DESIGN.md §2).
+    dispatch, for the whole set (DESIGN.md §2).  Stacking is deliberately
+    OFF here: this is the per-root *segment fusion* form (the matrices may
+    even have different shapes), and the measured baseline the stacked
+    ``run_lu_batched`` is compared against (DESIGN.md §7).
+    """
+    d = Dispatcher(graph=graph, mesh=mesh, stack_roots=False)
+    roots = []
+    for a in mats:
+        A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=jnp.asarray(a))
+        utp_getrf(d, A)
+        roots.append(A)
+    d.run()
+    return [_unpack(A) for A in roots]
+
+
+def run_lu_batched(
+    mats: Sequence[jnp.ndarray],
+    graph: str = "g2",
+    partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+    mesh=None,
+) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Pivot-free blocked LU of N same-geometry matrices as ONE *stacked*
+    batched drain (DESIGN.md §7).
+
+    All matrices must share shape/dtype; the dispatcher detects the
+    homogeneous root stream, stacks the roots along a new leading batch
+    dimension padded to a pow2 bucket, and expands/compiles the task graph
+    ONCE — launch count and compiled-program count are flat in N (any N
+    hits one of O(log N) bucket programs), unlike ``run_lu_many`` whose
+    fused groups still carry one gather/scatter segment per root.
     """
     d = Dispatcher(graph=graph, mesh=mesh)
     roots = []
@@ -220,6 +249,40 @@ def run_lu_solve(
     d.run()
     x = B.value
     return x[:, 0] if vec else x
+
+
+def run_lu_solve_batched(
+    mats: Sequence[jnp.ndarray],
+    rhss: Sequence[jnp.ndarray],
+    graph: str = "g2",
+    partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+    b_partitions: Tuple[Tuple[int, int], ...] = None,
+    mesh=None,
+) -> List[jnp.ndarray]:
+    """Solve N same-geometry systems ``a_i @ x_i == b_i`` in ONE stacked
+    drain (DESIGN.md §7): N composed LUSOLVE roots stack into a single
+    batched WaveProgram — the serving hot path ``BatchServer`` drains per
+    tick.  Geometry rules follow ``run_lu_solve`` (vector or matrix b)."""
+    if len(mats) != len(rhss):
+        raise ValueError(f"{len(mats)} matrices vs {len(rhss)} right-hand sides")
+    d = Dispatcher(graph=graph, mesh=mesh)
+    outs = []
+    for a, b in zip(mats, rhss):
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if b.shape[0] != a.shape[0]:
+            raise ValueError(f"shape mismatch: a {a.shape} vs b {b.shape}")
+        vec = b.ndim == 1
+        b2 = b[:, None] if vec else b
+        bp = b_partitions
+        if bp is None:
+            bp = tuple((pr, 1 if vec else pc) for pr, pc in partitions)
+        A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=a)
+        B = GData(b2.shape, partitions=bp, dtype=b2.dtype, value=b2)
+        utp_lu_solve(d, A, B)
+        outs.append((B, vec))
+    d.run()
+    return [B.value[:, 0] if vec else B.value for B, vec in outs]
 
 
 def run_inv(

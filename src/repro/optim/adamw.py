@@ -1,7 +1,7 @@
 """AdamW with global-norm clipping and configurable moment dtype.
 
 Moment dtype matters at scale: fp32 m/v for a 340B model is 2.7 TB of
-optimizer state; bf16 moments halve it (DESIGN.md §7).  Master params stay
+optimizer state; bf16 moments halve it (DESIGN.md §8).  Master params stay
 fp32; the forward/backward casts to the compute dtype.
 """
 

@@ -1,0 +1,17 @@
+"""Batched serving front end over the stacked drain path (DESIGN.md §7).
+
+``BatchServer`` queues many small independent user requests (e.g.
+``lu_solve(a, b)``), buckets them by structural signature, and drains ONE
+stacked WaveProgram per signature per ``tick()`` — the piece that turns the
+single-program compiler into a serving engine.  Each request returns a
+``ServeFuture`` resolved at tick time; results are extracted lazily from
+the shared stacked result grids.
+
+This is the task-layer analog of ``repro/serving`` (the LM token engine):
+same continuous-batching shape, but the unit of work is a whole task-graph
+drain rather than a decode step.
+"""
+
+from .server import BatchServer, ServeFuture, TickReport
+
+__all__ = ["BatchServer", "ServeFuture", "TickReport"]

@@ -1,0 +1,278 @@
+"""BatchServer: signature-bucketed batched serving of task-graph drains.
+
+Requests accumulate between ticks; ``tick()`` groups them by *structural
+signature* — (graph, operation, per-argument shape/dtype/partitions) — and
+submits each group's root tasks to one dispatcher drain.  A homogeneous
+group takes the stacked path (DESIGN.md §7): ONE batched WaveProgram over a
+pow2-padded batch axis, so a tick serving N requests of one signature costs
+one launch, and a structurally repeated tick replays with zero Python
+re-splitting and zero recompiles (the drain memo's stacked key is
+independent of the exact N inside a bucket).
+
+The generic surface is ``submit(op_name, arrays, ...)`` for any registered
+Operation; ``lu``, ``lu_solve``, and ``cholesky`` are typed conveniences
+that attach the right partitions and result extraction.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..core import Dispatcher, GData, GTask
+from ..core.operation import OpRegistry
+from ..linalg.lu import _unpack
+
+_rid = itertools.count()
+
+
+class ServeFuture:
+    """Per-request result handle: resolved at tick time, materialized lazily.
+
+    ``result()`` raises if the request has not been drained yet (call
+    ``BatchServer.tick()`` first).  Extraction is lazy: resolving stores a
+    thunk over the request's data handles, so a tick never pays per-request
+    de-grid work for results nobody reads.
+    """
+
+    def __init__(self, rid: int, signature: tuple):
+        self.rid = rid
+        self.signature = signature
+        self._thunk: Optional[Callable[[], Any]] = None
+        self._error: Optional[BaseException] = None
+        self._value: Any = None
+        self._materialized = False
+
+    @property
+    def done(self) -> bool:
+        return self._thunk is not None or self._error is not None
+
+    def _resolve(self, thunk: Callable[[], Any]) -> None:
+        self._thunk = thunk
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+
+    def result(self) -> Any:
+        if self._error is not None:
+            raise self._error
+        if self._thunk is None:
+            raise RuntimeError(
+                f"request {self.rid} not drained yet — call BatchServer.tick()"
+            )
+        if not self._materialized:
+            self._value = self._thunk()
+            self._materialized = True
+            self._thunk = lambda: self._value
+        return self._value
+
+
+@dataclass
+class _Pending:
+    future: ServeFuture
+    op: object
+    datas: List[GData]
+    extract: Callable[[List[GData]], Any]
+
+
+@dataclass
+class TickReport:
+    """What one ``tick()`` did, per signature bucket and in total."""
+
+    requests: int = 0
+    buckets: int = 0
+    drains: int = 0
+    launches: int = 0
+    compiles: int = 0
+    stacked_drains: int = 0
+    memo_hits: int = 0
+    memo_misses: int = 0
+    per_bucket: List[dict] = field(default_factory=list)
+
+
+class BatchServer:
+    """Queue -> signature buckets -> one stacked drain per bucket per tick.
+
+    ``max_batch`` caps one drain's batch (requests beyond it drain as
+    additional chunks in the same tick); it must be a power of two so full
+    chunks match compiled-program buckets exactly (a 48-cap would pad
+    every full chunk to the 64 bucket — 33% junk lanes forever).
+    """
+
+    def __init__(self, graph: str = "g2", mesh=None, max_batch: int = 64):
+        if max_batch < 1 or max_batch & (max_batch - 1):
+            raise ValueError(
+                f"max_batch must be a power of two >= 1, got {max_batch}"
+            )
+        self.graph = graph
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self._queues: Dict[tuple, List[_Pending]] = {}
+        self.stats: Dict[str, int] = {
+            "requests": 0,
+            "ticks": 0,
+            "drains": 0,
+            "launches": 0,
+            "compiles": 0,
+            "memo_hits": 0,
+            "memo_misses": 0,
+            "stacked_drains": 0,
+        }
+
+    # -- request surface -------------------------------------------------------
+    def submit(
+        self,
+        op_name: str,
+        arrays: Sequence[jnp.ndarray],
+        partitions: Sequence[Tuple[Tuple[int, int], ...]],
+        extract: Optional[Callable[[List[GData]], Any]] = None,
+    ) -> ServeFuture:
+        """Queue one request: ``op_name`` applied to ``arrays`` (one root
+        task).  ``partitions`` gives each argument's partition levels;
+        ``extract(datas)`` builds the result from the drained data handles
+        (default: the last argument's value — the written-in-place result
+        convention of the linalg families)."""
+        op = OpRegistry.get(op_name)
+        if len(arrays) != len(partitions):
+            raise ValueError(
+                f"{len(arrays)} arrays vs {len(partitions)} partition specs"
+            )
+        datas = [
+            GData(a.shape, partitions=parts, dtype=a.dtype, value=jnp.asarray(a))
+            for a, parts in zip(arrays, partitions)
+        ]
+        sig = (
+            self.graph,
+            op.name,
+            tuple(
+                (d.shape, str(jnp.dtype(d.dtype)), tuple(d.partitions))
+                for d in datas
+            ),
+        )
+        fut = ServeFuture(next(_rid), sig)
+        if extract is None:
+            extract = lambda ds: ds[-1].value
+        self._queues.setdefault(sig, []).append(
+            _Pending(fut, op, datas, extract)
+        )
+        self.stats["requests"] += 1
+        return fut
+
+    def lu(
+        self, a, partitions: Tuple[Tuple[int, int], ...] = ((4, 4),)
+    ) -> ServeFuture:
+        """Queue a pivot-free LU; resolves to (L, U) unpacked."""
+        return self.submit(
+            "getrf", [a], [partitions], extract=lambda ds: _unpack(ds[0])
+        )
+
+    def cholesky(
+        self, a, partitions: Tuple[Tuple[int, int], ...] = ((4, 4),)
+    ) -> ServeFuture:
+        """Queue a Cholesky factorization; resolves to the lower factor."""
+        return self.submit(
+            "potrf",
+            [a],
+            [partitions],
+            extract=lambda ds: jnp.tril(ds[0].value),
+        )
+
+    def lu_solve(
+        self,
+        a,
+        b,
+        partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+        b_partitions: Tuple[Tuple[int, int], ...] = None,
+    ) -> ServeFuture:
+        """Queue ``a @ x == b`` (composed factor+solve, one root task);
+        resolves to x.  ``b`` may be a vector or a matrix, as in
+        ``run_lu_solve``."""
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if b.shape[0] != a.shape[0]:
+            raise ValueError(f"shape mismatch: a {a.shape} vs b {b.shape}")
+        vec = b.ndim == 1
+        b2 = b[:, None] if vec else b
+        if b_partitions is None:
+            b_partitions = tuple(
+                (pr, 1 if vec else pc) for pr, pc in partitions
+            )
+        extract = (
+            (lambda ds: ds[1].value[:, 0]) if vec else (lambda ds: ds[1].value)
+        )
+        return self.submit(
+            "lu_solve", [a, b2], [partitions, b_partitions], extract=extract
+        )
+
+    # -- serving loop ----------------------------------------------------------
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def tick(self) -> TickReport:
+        """Drain every queued request: one stacked drain per signature
+        bucket (chunked at ``max_batch``), resolve the futures.
+
+        Failure containment: if a chunk's drain raises, that chunk's
+        futures carry the error (``result()`` re-raises it), every
+        not-yet-drained request stays queued for the next tick, and the
+        exception propagates to the tick caller — nothing is stranded."""
+        queues, self._queues = self._queues, {}
+        chunks: List[Tuple[tuple, List[_Pending]]] = [
+            (sig, pending[lo : lo + self.max_batch])
+            for sig, pending in queues.items()
+            for lo in range(0, len(pending), self.max_batch)
+        ]
+        report = TickReport()
+        report.buckets = len(queues)
+        self.stats["ticks"] += 1
+        for ci, (sig, chunk) in enumerate(chunks):
+            d = Dispatcher(graph=self.graph, mesh=self.mesh)
+            for p in chunk:
+                d.submit_task(
+                    GTask(p.op, None, [dd.root_view() for dd in p.datas])
+                )
+            try:
+                d.run()
+            except BaseException as e:
+                for p in chunk:
+                    p.future._fail(e)
+                for sig2, rest in chunks[ci + 1 :]:
+                    self._queues.setdefault(sig2, []).extend(rest)
+                raise
+            for p in chunk:
+                datas = p.datas
+                extract = p.extract
+                p.future._resolve(
+                    (lambda ds=datas, ex=extract: ex(ds))
+                )
+            est = d.executor.stats
+            bucket_stats = {
+                "signature": sig[1],
+                "requests": len(chunk),
+                "launches": int(est.get("launches", 0)),
+                "compiles": int(est.get("compiles", 0)),
+                "stacked": int(d.stats["stacked_drains"]),
+                "memo_hits": int(d.stats["memo_hits"]),
+                "memo_misses": int(d.stats["memo_misses"]),
+            }
+            report.per_bucket.append(bucket_stats)
+            report.requests += len(chunk)
+            report.drains += 1
+            report.launches += bucket_stats["launches"]
+            report.compiles += bucket_stats["compiles"]
+            report.stacked_drains += bucket_stats["stacked"]
+            report.memo_hits += bucket_stats["memo_hits"]
+            report.memo_misses += bucket_stats["memo_misses"]
+        for k in (
+            "drains",
+            "launches",
+            "compiles",
+            "memo_hits",
+            "memo_misses",
+            "stacked_drains",
+        ):
+            self.stats[k] += getattr(report, k)
+        return report

@@ -132,7 +132,10 @@ def test_multiroot_lu_pair_fuses_groups_across_roots():
     n, p = 64, 4
     a = dd_matrix(n, seed=21)
     b = dd_matrix(n, seed=22)
-    d = Dispatcher(graph="g2")
+    # stack_roots=False pins the PR-3 segment-fusion path: a homogeneous
+    # pair would otherwise take the stacked batched-program path
+    # (DESIGN.md §7, tests/test_stacked_drain.py)
+    d = Dispatcher(graph="g2", stack_roots=False)
     A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
     B = GData(b.shape, partitions=((p, p),), dtype=b.dtype, value=b)
     utp_getrf(d, A)

@@ -1,0 +1,209 @@
+"""BatchServer: signature-bucketed batched serving (DESIGN.md §7).
+
+Covers: future resolution + numerics for lu / cholesky / lu_solve requests
+(vector and matrix right-hand sides), per-signature bucketing inside one
+tick, the repeat-tick contract (0 compiles / 1 launch / 1 stacked drain per
+signature bucket), max_batch chunking, and the unresolved-future error.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import dd_matrix, spd_matrix
+from repro.core.executors import clear_compile_cache
+from repro.linalg import run_lu, run_lu_solve
+from repro.serve import BatchServer
+
+
+def _rhs(n, m=None, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (n,) if m is None else (n, m)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def test_lu_solve_requests_resolve_and_match():
+    clear_compile_cache()
+    n, N = 64, 5
+    srv = BatchServer(graph="g2")
+    futs, refs = [], []
+    for s in range(N):
+        a = dd_matrix(n, seed=s)
+        b = _rhs(n, seed=s)
+        futs.append(srv.lu_solve(a, b))
+        refs.append(run_lu_solve(a, b, partitions=((4, 4),)))
+    assert srv.pending() == N and not futs[0].done
+    rep = srv.tick()
+    assert rep.requests == N and rep.buckets == 1
+    assert rep.stacked_drains == 1 and rep.launches == 1
+    assert srv.pending() == 0
+    for f, r in zip(futs, refs):
+        assert f.done
+        x = f.result()
+        assert x.shape == (n,)  # vector rhs round-trips as a vector
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(r), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_mixed_signatures_bucket_separately():
+    clear_compile_cache()
+    srv = BatchServer(graph="g2")
+    lu_futs = [srv.lu(dd_matrix(64, seed=s)) for s in range(3)]
+    chol_futs = [
+        srv.cholesky(spd_matrix(32, seed=s), partitions=((4, 4),))
+        for s in range(2)
+    ]
+    rep = srv.tick()
+    assert rep.buckets == 2 and rep.drains == 2
+    assert rep.stacked_drains == 2  # each homogeneous bucket stacked
+    for s, f in enumerate(lu_futs):
+        l, u = f.result()
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u),
+            np.asarray(dd_matrix(64, seed=s)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+    for s, f in enumerate(chol_futs):
+        L = np.asarray(f.result())
+        np.testing.assert_allclose(
+            L @ L.T, np.asarray(spd_matrix(32, seed=s)), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_repeat_tick_replays_zero_compiles_one_launch():
+    """The serving steady state: a structurally repeated tick must do NO
+    Python re-splitting and NO recompilation — one program launch per
+    signature bucket (DESIGN.md §7 acceptance contract)."""
+    clear_compile_cache()
+    n = 64
+    srv = BatchServer(graph="g2")
+
+    def one_tick(seed0):
+        for s in range(4):
+            srv.lu_solve(dd_matrix(n, seed=seed0 + s), _rhs(n, seed=s))
+        return srv.tick()
+
+    one_tick(0)  # capture tick (compiles once)
+    for seed0 in (10, 20):
+        rep = one_tick(seed0)
+        assert rep.compiles == 0, rep
+        assert rep.launches == 1 and rep.stacked_drains == 1
+        assert rep.memo_hits == 1 and rep.memo_misses == 0
+        for b in rep.per_bucket:
+            assert b["compiles"] == 0 and b["launches"] == 1
+
+
+def test_max_batch_chunks_one_signature():
+    clear_compile_cache()
+    n = 64
+    srv = BatchServer(graph="g2", max_batch=2)
+    futs = [srv.lu(dd_matrix(n, seed=s)) for s in range(5)]
+    rep = srv.tick()
+    assert rep.buckets == 1 and rep.drains == 3  # 2 + 2 + 1
+    for s, f in enumerate(futs):
+        l, u = f.result()
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u),
+            np.asarray(dd_matrix(n, seed=s)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+def test_single_request_tick_still_serves():
+    clear_compile_cache()
+    srv = BatchServer(graph="g2")
+    f = srv.lu(dd_matrix(64, seed=91))
+    rep = srv.tick()
+    # one request cannot stack (nothing to batch) but must still resolve
+    assert rep.requests == 1
+    l, u = f.result()
+    rl, ru = run_lu(dd_matrix(64, seed=91), partitions=((4, 4),))
+    np.testing.assert_allclose(np.asarray(l), np.asarray(rl), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(ru), rtol=1e-6)
+
+
+def test_matrix_rhs_lu_solve():
+    clear_compile_cache()
+    n = 64
+    srv = BatchServer(graph="g2")
+    a = dd_matrix(n, seed=7)
+    b = _rhs(n, m=8, seed=7)
+    f = srv.lu_solve(a, b, b_partitions=((4, 1),))
+    srv.tick()
+    np.testing.assert_allclose(
+        np.asarray(f.result()),
+        np.asarray(
+            run_lu_solve(a, b, partitions=((4, 4),), b_partitions=((4, 1),))
+        ),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_result_before_tick_raises():
+    srv = BatchServer(graph="g2")
+    f = srv.lu(dd_matrix(32, seed=1), partitions=((2, 2),))
+    with pytest.raises(RuntimeError, match="not drained"):
+        f.result()
+    srv.tick()
+    f.result()  # resolves after the tick
+
+
+def test_submit_validation():
+    srv = BatchServer(graph="g2")
+    with pytest.raises(ValueError, match="arrays vs"):
+        srv.submit("getrf", [jnp.eye(8)], [])
+    with pytest.raises(ValueError, match="shape mismatch"):
+        srv.lu_solve(jnp.eye(8), jnp.ones((4,)))
+    for bad in (0, 48):  # must be a pow2 so chunks match program buckets
+        with pytest.raises(ValueError, match="max_batch"):
+            BatchServer(max_batch=bad)
+
+
+def test_tick_failure_fails_chunk_and_requeues_rest():
+    """If one chunk's drain raises, its futures carry the error, every
+    not-yet-drained request stays queued for the next tick, and the
+    exception reaches the tick caller — no request is stranded."""
+    clear_compile_cache()
+    srv = BatchServer(graph="g2", max_batch=2)
+    boom = RuntimeError("executor down")
+    good = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(2)]
+    later = [srv.lu(dd_matrix(32, seed=9), partitions=((2, 2),))]
+    calls = {"n": 0}
+
+    import repro.serve.server as server_mod
+
+    real_dispatcher = server_mod.Dispatcher
+
+    class FailingFirst(real_dispatcher):
+        def run(self):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise boom
+            return super().run()
+
+    server_mod.Dispatcher = FailingFirst
+    try:
+        with pytest.raises(RuntimeError, match="executor down"):
+            srv.tick()
+    finally:
+        server_mod.Dispatcher = real_dispatcher
+    # first chunk failed: its futures re-raise the drain error
+    for f in good:
+        assert f.done
+        with pytest.raises(RuntimeError, match="executor down"):
+            f.result()
+    # the untouched chunk was re-queued and serves on the next tick
+    assert srv.pending() == 1
+    srv.tick()
+    l, u = later[0].result()
+    np.testing.assert_allclose(
+        np.asarray(l) @ np.asarray(u),
+        np.asarray(dd_matrix(32, seed=9)),
+        rtol=2e-4,
+        atol=2e-4,
+    )

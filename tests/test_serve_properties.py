@@ -1,0 +1,81 @@
+"""Hypothesis property test: stacked drains match independent drains.
+
+For random batch sizes (pow2 and not), geometries, and task-flow graphs,
+every per-request result of one stacked batched drain must match the same
+request run as its own independent drain.  Tolerance note: the stacked
+program compiles DIFFERENT XLA programs (leaf stacks of size B*s instead
+of s), so bit-exactness across the two compilations is not guaranteed by
+XLA; observed differences are ~1 ulp and the assertion uses a 1e-6
+tolerance several orders tighter than the factorization's own error.
+
+Separate module from test_serve so the hypothesis importorskip (as in
+test_core_versioning / test_schedule_properties) does not skip the
+deterministic serving tests.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import dd_matrix
+from repro.core.executors import clear_compile_cache
+from repro.linalg import run_lu, run_lu_batched, run_lu_solve, run_lu_solve_batched
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_roots=st.integers(1, 6),
+    geom=st.sampled_from([(32, 2), (32, 4), (64, 4)]),
+    graph=st.sampled_from(["g1", "g2"]),
+    seed=st.integers(0, 1000),
+)
+def test_stacked_lu_matches_independent_drains(n_roots, geom, graph, seed):
+    n, p = geom
+    mats = [dd_matrix(n, seed=seed + s) for s in range(n_roots)]
+    clear_compile_cache()
+    stacked = run_lu_batched(mats, graph=graph, partitions=((p, p),))
+    clear_compile_cache()
+    singles = [run_lu(m, graph=graph, partitions=((p, p),)) for m in mats]
+    for (ls, us), (li, ui) in zip(stacked, singles):
+        np.testing.assert_allclose(
+            np.asarray(ls), np.asarray(li), rtol=1e-6, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(us), np.asarray(ui), rtol=1e-6, atol=1e-6
+        )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_roots=st.integers(1, 5),
+    m_cols=st.sampled_from([1, 4]),
+    graph=st.sampled_from(["g1", "g2"]),
+    seed=st.integers(0, 1000),
+)
+def test_stacked_lu_solve_matches_independent_drains(
+    n_roots, m_cols, graph, seed
+):
+    n, p = 32, 4
+    rng = np.random.default_rng(seed)
+    mats = [dd_matrix(n, seed=seed + s) for s in range(n_roots)]
+    rhss = [
+        rng.standard_normal((n, m_cols)).astype(np.float32)
+        for _ in range(n_roots)
+    ]
+    clear_compile_cache()
+    stacked = run_lu_solve_batched(
+        mats, rhss, graph=graph, partitions=((p, p),), b_partitions=((p, 1),)
+    )
+    clear_compile_cache()
+    singles = [
+        run_lu_solve(
+            a, b, graph=graph, partitions=((p, p),), b_partitions=((p, 1),)
+        )
+        for a, b in zip(mats, rhss)
+    ]
+    for xs, xi in zip(stacked, singles):
+        np.testing.assert_allclose(
+            np.asarray(xs), np.asarray(xi), rtol=1e-6, atol=1e-6
+        )

@@ -1,0 +1,479 @@
+"""Homogeneous-root stacking: batched WavePrograms + stacked drain memo
+(DESIGN.md §7).
+
+Covers: the stacked-epoch lane machinery on GData, stacking detection
+(homogeneous streams stack, heterogeneous / data-sharing / opted-out
+streams keep the PR-3 segment-fusion path), one-launch one-compile stacked
+drains on both backends, pow2 bucket padding with O(log N) compiles over a
+batch-size sweep, the N-independent stacked memo key (N=3 replays the N=4
+bucket's capture), the composed LUSOLVE pipeline under stacking, and the
+LRU drain memo (eviction + re-capture + counters — satellites of this PR).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    Access,
+    Dispatcher,
+    GData,
+    GTask,
+    Operation,
+    TaskFlowGraph,
+    dd_matrix,
+    spd_matrix,
+)
+from repro.core.data import StackedEpoch, from_grid, to_grid
+from repro.core.executors import clear_compile_cache
+from repro.core.executors.jit_wave import (
+    _DRAIN_MEMO,
+    drain_memo_stats,
+    set_drain_memo_capacity,
+)
+from repro.linalg import run_lu, run_lu_batched, run_lu_solve, run_lu_solve_batched
+from repro.linalg.cholesky import utp_cholesky
+from repro.linalg.lu import utp_getrf
+
+
+# --------------------------------------------------------------------------
+# GData stacked-epoch lanes
+# --------------------------------------------------------------------------
+class TestStackedEpochLanes:
+    def _epoch(self, vals, br=4, bc=4):
+        grid = jnp.stack([to_grid(jnp.asarray(v), br, bc) for v in vals])
+        return StackedEpoch(grid, (br, bc))
+
+    def test_value_reads_lane(self):
+        vals = [
+            np.arange(64, dtype=np.float32).reshape(8, 8) + 100 * i
+            for i in range(3)
+        ]
+        ep = self._epoch(vals)
+        datas = [GData((8, 8)) for _ in range(3)]
+        for i, d in enumerate(datas):
+            d.adopt_lane(ep, i)
+            assert d.has_value and not d.in_grid_epoch
+        for i, d in enumerate(datas):
+            np.testing.assert_array_equal(np.asarray(d.value), vals[i])
+            assert d.lane is None  # resolved
+
+    def test_enter_grid_slices_lane_without_roundtrip(self):
+        vals = [np.full((8, 8), float(i), dtype=np.float32) for i in range(2)]
+        ep = self._epoch(vals)
+        d = GData((8, 8))
+        d.adopt_lane(ep, 1)
+        g = d.enter_grid(4, 4)
+        assert d.in_grid_epoch and d.grid_block == (4, 4)
+        np.testing.assert_array_equal(np.asarray(from_grid(g)), vals[1])
+
+    def test_enter_grid_other_block_flushes_through_value(self):
+        vals = [np.arange(64, dtype=np.float32).reshape(8, 8)]
+        ep = self._epoch(vals)
+        d = GData((8, 8))
+        d.adopt_lane(ep, 0)
+        g = d.enter_grid(2, 2)
+        np.testing.assert_array_equal(np.asarray(from_grid(g)), vals[0])
+
+    def test_value_write_drops_lane(self):
+        ep = self._epoch([np.zeros((8, 8), dtype=np.float32)])
+        d = GData((8, 8))
+        d.adopt_lane(ep, 0)
+        d.value = jnp.ones((8, 8))
+        assert d.lane is None
+        np.testing.assert_array_equal(np.asarray(d.value), np.ones((8, 8)))
+
+    def test_adopt_lane_shape_mismatch_raises(self):
+        ep = self._epoch([np.zeros((8, 8), dtype=np.float32)])
+        d = GData((16, 16))
+        with pytest.raises(ValueError, match="stacked lane shape"):
+            d.adopt_lane(ep, 0)
+
+
+# --------------------------------------------------------------------------
+# Stacked drains: detection, one launch/compile, numerics
+# --------------------------------------------------------------------------
+def _stacked_lu_drain(mats, p, graph="g2"):
+    d = Dispatcher(graph=graph)
+    roots = []
+    for m in mats:
+        A = GData(m.shape, partitions=((p, p),), dtype=m.dtype, value=m)
+        utp_getrf(d, A)
+        roots.append(A)
+    n = d.run()
+    return d, roots, n
+
+
+@pytest.mark.parametrize("graph", ["g2", "g2p"])
+def test_stacked_lu_one_launch_one_compile(graph):
+    clear_compile_cache()
+    n, p, N = 64, 4, 3
+    mats = [dd_matrix(n, seed=s) for s in range(N)]
+    refs = [run_lu(m, partitions=((p, p),)) for m in mats]
+    clear_compile_cache()
+    d, roots, leaf = _stacked_lu_drain(mats, p, graph)
+    assert d.stats["stacked_drains"] == 1
+    assert d.executor.stats["launches"] == 1
+    assert d.executor.stats["compiles"] == 1
+    # the drain expands ONE template: leaf count is the single-root count
+    assert leaf == 30
+    for A, (rl, ru) in zip(roots, refs):
+        packed = np.asarray(A.value)
+        l = np.tril(packed, -1) + np.eye(n)
+        u = np.triu(packed)
+        np.testing.assert_allclose(l, np.asarray(rl), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(u, np.asarray(ru), rtol=1e-6, atol=1e-6)
+
+
+def test_stacked_memo_key_is_bucket_not_n():
+    """N=3 and N=4 share the pow2 bucket 4: after an N=4 capture, an N=3
+    drain is a pure replay — zero recompiles, zero re-splitting, the memo
+    key is independent of the exact request count (DESIGN.md §7)."""
+    clear_compile_cache()
+    n, p = 64, 4
+    d4, roots4, _ = _stacked_lu_drain(
+        [dd_matrix(n, seed=s) for s in range(4)], p
+    )
+    assert d4.executor.stats["compiles"] == 1
+    assert d4.stats["memo_misses"] == 1
+    mats3 = [dd_matrix(n, seed=10 + s) for s in range(3)]
+    d3, roots3, _ = _stacked_lu_drain(mats3, p)
+    assert d3.stats["memo_hits"] == 1
+    assert d3.stats["split"] == d4.stats["split"]  # replay mirrors stats
+    assert d3.executor.stats.get("compiles", 0) == 0
+    assert d3.executor.stats["launches"] == 1
+    for A, m in zip(roots3, mats3):
+        packed = np.asarray(A.value)
+        l = np.tril(packed, -1) + np.eye(n)
+        u = np.triu(packed)
+        np.testing.assert_allclose(
+            l @ u, np.asarray(m), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_stacked_compile_sweep_is_olog_n():
+    """Batch sizes 1..9 bucket to {1(unstacked), 2, 4, 8, 16}: at most 5
+    compiled programs across the whole sweep."""
+    clear_compile_cache()
+    n, p = 32, 2
+    total = 0
+    for N in range(1, 10):
+        d, roots, _ = _stacked_lu_drain(
+            [dd_matrix(n, seed=N * 16 + s) for s in range(N)], p
+        )
+        total += d.executor.stats.get("compiles", 0)
+        for A, s in zip(roots, range(N)):
+            packed = np.asarray(A.value)
+            l = np.tril(packed, -1) + np.eye(n)
+            u = np.triu(packed)
+            np.testing.assert_allclose(
+                l @ u,
+                np.asarray(dd_matrix(n, seed=N * 16 + s)),
+                rtol=2e-4,
+                atol=2e-4,
+            )
+    assert total <= 5, total
+
+
+def test_stacked_composed_lu_solve():
+    """N composed LUSOLVE roots stack: the full factor+forward+backward
+    pipeline runs as one batched program and matches per-request
+    run_lu_solve."""
+    clear_compile_cache()
+    n, p, N = 64, 4, 3
+    rng = np.random.default_rng(3)
+    mats = [dd_matrix(n, seed=40 + s) for s in range(N)]
+    rhss = [rng.standard_normal((n, 8)).astype(np.float32) for _ in range(N)]
+    refs = [
+        run_lu_solve(a, b, partitions=((p, p),), b_partitions=((p, 1),))
+        for a, b in zip(mats, rhss)
+    ]
+    clear_compile_cache()
+    xs = run_lu_solve_batched(
+        mats, rhss, partitions=((p, p),), b_partitions=((p, 1),)
+    )
+    for x, r in zip(xs, refs):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(r), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_run_lu_batched_replays_and_matches():
+    clear_compile_cache()
+    n, p = 64, 4
+    mats = [dd_matrix(n, seed=60 + s) for s in range(4)]
+    outs = run_lu_batched(mats, partitions=((p, p),))
+    mats2 = [dd_matrix(n, seed=70 + s) for s in range(4)]
+    outs2 = run_lu_batched(mats2, partitions=((p, p),))  # memo replay
+    for (l, u), m in zip(outs + outs2, mats + mats2):
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u), np.asarray(m), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_redraining_subset_of_stacked_members_keeps_bystander_lane_valid():
+    """Donation-safety regression: after a stacked N=4 drain, re-draining
+    only 3 of the members must NOT donate the shared epoch grid back into
+    the next program (the 4th member still holds a lane of it).  The
+    holders refcount on StackedEpoch guards this."""
+    clear_compile_cache()
+    n, p = 32, 2
+    mats = [dd_matrix(n, seed=90 + s) for s in range(4)]
+    d, roots, _ = _stacked_lu_drain(mats, p)
+    assert d.stats["stacked_drains"] == 1
+    # second stacked drain over the first three members' RESULTS
+    d2 = Dispatcher(graph="g2")
+    for A in roots[:3]:
+        utp_getrf(d2, A)
+    d2.run()
+    assert d2.stats["stacked_drains"] == 1
+    # the bystander's lane must still read its ORIGINAL factor
+    packed = np.asarray(roots[3].value)
+    l = np.tril(packed, -1) + np.eye(n)
+    u = np.triu(packed)
+    np.testing.assert_allclose(
+        l @ u, np.asarray(mats[3]), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_repeat_drain_on_same_members_reuses_epoch_grid():
+    """The repeat-tick fast path: draining the SAME member set again finds
+    them as lanes 0..N-1 of one epoch (sole holders) and restacks for
+    free.  Semantics check: the second factor runs on the first's output."""
+    clear_compile_cache()
+    n, p = 32, 2
+    mats = [dd_matrix(n, seed=95 + s) for s in range(2)]
+    d, roots, _ = _stacked_lu_drain(mats, p)
+    d2 = Dispatcher(graph="g2")
+    for A in roots:
+        utp_getrf(d2, A)
+    d2.run()
+    assert d2.stats["stacked_drains"] == 1
+    assert d2.executor.stats.get("compiles", 0) == 0  # same bucket program
+    # reference: factor-of-factor computed through the unstacked path
+    for A, m in zip(roots, mats):
+        ref1 = run_lu(m, partitions=((p, p),))
+        ref_packed = np.tril(np.asarray(ref1[0]), -1) + np.asarray(ref1[1])
+        ref2 = run_lu(ref_packed, partitions=((p, p),))
+        packed = np.asarray(A.value)
+        l = np.tril(packed, -1) + np.eye(n)
+        u = np.triu(packed)
+        np.testing.assert_allclose(
+            l, np.asarray(ref2[0]), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            u, np.asarray(ref2[1]), rtol=1e-5, atol=1e-5
+        )
+
+
+# --------------------------------------------------------------------------
+# Fallback contract: when streams do NOT stack (DESIGN.md §7)
+# --------------------------------------------------------------------------
+def test_heterogeneous_stream_keeps_segment_fusion():
+    """LU + Cholesky roots: different ops -> no stacking; the PR-3 path
+    still compiles both workloads into one program."""
+    clear_compile_cache()
+    n, p = 64, 4
+    a = dd_matrix(n, seed=81)
+    b = spd_matrix(n, seed=82)
+    d = Dispatcher(graph="g2")
+    A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
+    B = GData(b.shape, partitions=((p, p),), dtype=b.dtype, value=b)
+    utp_getrf(d, A)
+    utp_cholesky(d, B)
+    d.run()
+    assert d.stats["stacked_drains"] == 0
+    assert d.executor.stats["launches"] == 1
+
+
+def test_shared_data_roots_do_not_stack():
+    """Two GETRF roots on the SAME datum are a dependent chain, not a
+    batch: stacking must refuse (args not data-disjoint) and the normal
+    versioned drain must run both in order."""
+    clear_compile_cache()
+    n, p = 64, 4
+    m = dd_matrix(n, seed=83)
+    d = Dispatcher(graph="g2")
+    X = GData(m.shape, partitions=((p, p),), dtype=m.dtype, value=m)
+    utp_getrf(d, X)
+    utp_getrf(d, X)
+    d.run()
+    assert d.stats["stacked_drains"] == 0
+
+
+def test_mixed_geometry_stream_does_not_stack():
+    clear_compile_cache()
+    p = 4
+    d = Dispatcher(graph="g2")
+    for n in (64, 32):
+        m = dd_matrix(n, seed=84)
+        A = GData(m.shape, partitions=((p, p),), dtype=m.dtype, value=m)
+        utp_getrf(d, A)
+    d.run()
+    assert d.stats["stacked_drains"] == 0
+
+
+def test_stack_roots_opt_out_pins_segment_fusion():
+    """Dispatcher(stack_roots=False) reproduces the PR-3 cross-root
+    segment fusion exactly: half the prefusion group count, one launch."""
+    clear_compile_cache()
+    n, p = 64, 4
+    d = Dispatcher(graph="g2", stack_roots=False)
+    for s in (85, 86):
+        m = dd_matrix(n, seed=s)
+        A = GData(m.shape, partitions=((p, p),), dtype=m.dtype, value=m)
+        utp_getrf(d, A)
+    d.run()
+    st = d.executor.stats
+    assert d.stats["stacked_drains"] == 0
+    assert st["launches"] == 1
+    assert st["groups_prefusion"] == 2 * st["groups"]
+
+
+class _InnerValueDepOp(Operation):
+    """Non-memoizable block op: its split is allowed to read data values,
+    which collect mode cannot honor (nothing has executed yet)."""
+
+    name = "stk_inner_vd"
+    memoizable = False
+
+    def default_modes(self, n):
+        return [Access.READWRITE]
+
+    def leaf_fn(self, backend):
+        return lambda b: b + 1.0
+
+    def split(self, task, submit):
+        A = task.args[0]
+        for i in range(A.row_part_num()):
+            for j in range(A.col_part_num()):
+                submit(GTask(_INNER_VD, task, [A(i, j)]))
+
+
+class _OuterOp(Operation):
+    """Memoizable root whose expansion contains non-memoizable children."""
+
+    name = "stk_outer"
+
+    def default_modes(self, n):
+        return [Access.READWRITE]
+
+    def leaf_fn(self, backend):
+        return lambda b: b + 1.0
+
+    def split(self, task, submit):
+        A = task.args[0]
+        for i in range(A.row_part_num()):
+            for j in range(A.col_part_num()):
+                submit(GTask(_INNER_VD, task, [A(i, j)]))
+
+
+_INNER_VD = _InnerValueDepOp()
+_OUTER = _OuterOp()
+
+
+def test_value_dependent_split_below_root_aborts_stacking():
+    """A memoizable root whose expansion SPLITS a non-memoizable op must
+    not run stacked: collect mode defers all execution, but a value-
+    dependent split may read values earlier leaf scopes produce.  The
+    drain must fall back to the normal interleaved path and stay exact."""
+    clear_compile_cache()
+    graph = TaskFlowGraph("g2deep", split_levels=2, leaf_executor="jit_wave")
+    d = Dispatcher(graph=graph)
+    roots = []
+    for _ in range(2):
+        A = GData(
+            (8, 8),
+            partitions=((2, 2), (2, 2)),
+            value=np.zeros((8, 8), dtype=np.float32),
+        )
+        d.submit_task(GTask(_OUTER, None, [A.root_view()]))
+        roots.append(A)
+    d.run()
+    assert d.stats["stacked_drains"] == 0  # aborted, not stacked
+    for A in roots:
+        np.testing.assert_array_equal(
+            np.asarray(A.value), np.ones((8, 8), dtype=np.float32)
+        )
+
+
+# --------------------------------------------------------------------------
+# Dispatcher memo counters (satellite): visible without executor internals
+# --------------------------------------------------------------------------
+def test_dispatcher_memo_counters_on_unstacked_drains():
+    clear_compile_cache()
+    a = spd_matrix(32, seed=5)
+
+    def drain():
+        d = Dispatcher(graph="g2")
+        A = GData(a.shape, partitions=((4, 4),), dtype=a.dtype, value=a)
+        utp_cholesky(d, A)
+        d.run()
+        return d
+
+    d1 = drain()
+    assert d1.stats["memo_misses"] == 1 and d1.stats["memo_hits"] == 0
+    d2 = drain()
+    assert d2.stats["memo_hits"] == 1 and d2.stats["memo_misses"] == 0
+
+
+# --------------------------------------------------------------------------
+# LRU drain memo (satellite): bounded, counted, re-captures after eviction
+# --------------------------------------------------------------------------
+def test_drain_memo_lru_eviction_and_recapture():
+    clear_compile_cache()
+    old_cap = _DRAIN_MEMO.capacity
+    try:
+        set_drain_memo_capacity(2)
+        n = 32
+
+        def drain(p):
+            a = spd_matrix(n, seed=p)
+            d = Dispatcher(graph="g2")
+            A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
+            utp_cholesky(d, A)
+            d.run()
+            return d
+
+        ev0 = _DRAIN_MEMO.evictions
+        drain(2)  # memo: {p2}
+        drain(4)  # memo: {p2, p4}
+        drain(8)  # memo: {p4, p8} — p2 evicted (LRU)
+        assert len(_DRAIN_MEMO) == 2
+        assert _DRAIN_MEMO.evictions == ev0 + 1
+        d = drain(2)  # evicted structure: miss + re-capture, still correct
+        assert d.stats["memo_misses"] == 1 and d.stats["memo_hits"] == 0
+        assert len(_DRAIN_MEMO) == 2
+        d = drain(2)  # now memoized again
+        assert d.stats["memo_hits"] == 1
+        stats = drain_memo_stats()
+        assert stats["capacity"] == 2 and stats["entries"] == 2
+        assert stats["evictions"] >= ev0 + 2  # p8 or p4 fell out above
+    finally:
+        set_drain_memo_capacity(old_cap)
+        clear_compile_cache()
+
+
+def test_set_drain_memo_capacity_validates():
+    with pytest.raises(ValueError):
+        set_drain_memo_capacity(0)
+
+
+def test_drain_memo_capacity_shrink_evicts_immediately():
+    clear_compile_cache()
+    old_cap = _DRAIN_MEMO.capacity
+    try:
+        set_drain_memo_capacity(8)
+        for p in (2, 4, 8):
+            a = spd_matrix(32, seed=p)
+            d = Dispatcher(graph="g2")
+            A = GData(a.shape, partitions=((p, p),), dtype=a.dtype, value=a)
+            utp_cholesky(d, A)
+            d.run()
+        assert len(_DRAIN_MEMO) == 3
+        set_drain_memo_capacity(1)
+        assert len(_DRAIN_MEMO) == 1
+    finally:
+        set_drain_memo_capacity(old_cap)
+        clear_compile_cache()
