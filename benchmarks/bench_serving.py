@@ -17,7 +17,11 @@ N=1 unstacked drain) and the ``BatchServer`` steady state (repeat ticks
 must be 0 compiles / 1 launch per signature bucket).
 
 Emits ``BENCH_serving.json`` (``--smoke``: smaller sizes, writes
-``BENCH_serving.smoke.json`` for CI's serving gate).
+``BENCH_serving.smoke.json`` for CI's serving gate).  ``--overload`` adds a
+fault-and-overload scenario (DESIGN.md §10): a burst past ``max_pending``
+plus an injected poisoned request, recording p50/p99 latency and the
+shed/retried/failed counters — CI's serving gate checks this section
+alongside the unchanged 0-compile/1-launch repeat-tick contract.
 """
 
 from __future__ import annotations
@@ -35,6 +39,7 @@ from repro.core.executors.jit_wave import drain_memo_stats
 from repro.linalg import run_lu, run_lu_batched, run_lu_many
 from repro.linalg.lu import utp_getrf
 from repro.serve import BatchServer
+from repro.testing import faults
 
 from .common import row, timeit, timeit_pair
 
@@ -46,7 +51,68 @@ def _mats(N: int, n: int, seed0: int = 0):
     return [dd_matrix(n, seed=seed0 + s) for s in range(N)]
 
 
-def main(smoke: bool = False) -> None:
+def _overload_section(smoke: bool) -> dict:
+    """Overload + fault scenario: burst past ``max_pending`` (sheds with
+    RejectedError), then a deterministically poisoned request (bisect
+    isolates it; its retries exhaust into DrainError) — every healthy
+    request still resolves, and the section records the latency
+    percentiles and shed/retried/failed counters for CI's serving gate."""
+    clear_compile_cache()
+    n, max_pending = (32, 12) if smoke else (64, 24)
+    srv = BatchServer(
+        graph="g2",
+        max_batch=8,
+        max_pending=max_pending,
+        overload_policy="reject",
+        max_retries=1,
+        retry_backoff=1,
+    )
+    burst = max_pending + 8  # 8 requests past the bound are shed
+    futs = [
+        srv.lu(dd_matrix(n, seed=s), partitions=((2, 2),))
+        for s in range(burst)
+    ]
+    srv.tick()
+    poison = [
+        srv.lu(dd_matrix(n, seed=100 + s), partitions=((2, 2),))
+        for s in range(8)
+    ]
+    target = poison[3].rid
+    with faults.inject(
+        "serve.drain",
+        RuntimeError("injected: lane poisoned"),
+        when=lambda ctx: target in ctx["rids"],
+        times=None,
+    ):
+        srv.tick()  # bisects; poisoned request consumes its retry
+        while srv.pending():
+            srv.tick()  # backoff ticks, then the retry exhausts
+    healthy = sum(
+        1 for f in futs + poison if f.done and f.exception() is None
+    )
+    section = {
+        "submitted": burst + 8,
+        "max_pending": max_pending,
+        "policy": "reject",
+        "resolved": healthy,
+        "shed": srv.stats["shed"],
+        "retried": srv.stats["retried"],
+        "failed": srv.stats["failed"],
+        "bisected": srv.stats["bisected"],
+        "latency": srv.latency_percentiles(),
+    }
+    row(
+        "serve_overload",
+        0.0,
+        f"{healthy}/{burst + 8} resolved shed={section['shed']} "
+        f"retried={section['retried']} failed={section['failed']} "
+        f"p50={section['latency']['p50_ms']:.1f}ms "
+        f"p99={section['latency']['p99_ms']:.1f}ms",
+    )
+    return section
+
+
+def main(smoke: bool = False, overload: bool = False) -> None:
     n, p = (64, 4) if smoke else (128, 4)
     sweep_max = 16 if smoke else 64
     batch_sizes = (1, 4, 16) if smoke else (1, 4, 16, 64)
@@ -145,10 +211,12 @@ def main(smoke: bool = False) -> None:
     repeat_launches = [r.launches for r in reports]
     t_tick = timeit(lambda: queue_and_tick(rng.integers(1 << 20)),
                     warmup=1, iters=(3 if smoke else 7))
+    latency = srv.latency_percentiles()
     row(
         "serve_tick_lu_solve",
         t_tick,
-        f"{tick_n/t_tick:.1f}req/s repeat_compiles={repeat_compiles}",
+        f"{tick_n/t_tick:.1f}req/s repeat_compiles={repeat_compiles} "
+        f"p50={latency['p50_ms']:.1f}ms p99={latency['p99_ms']:.1f}ms",
     )
     report.update(
         tick_requests=tick_n,
@@ -156,8 +224,12 @@ def main(smoke: bool = False) -> None:
         tick_req_per_s=tick_n / t_tick,
         repeat_tick_compiles=repeat_compiles,
         repeat_tick_launches=repeat_launches,
+        latency=latency,
         server_stats=dict(srv.stats),
     )
+
+    if overload:
+        report["overload"] = _overload_section(smoke)
 
     path = SMOKE_JSON_PATH if smoke else JSON_PATH
     with open(path, "w") as f:
@@ -167,4 +239,7 @@ def main(smoke: bool = False) -> None:
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv[1:])
+    main(
+        smoke="--smoke" in sys.argv[1:],
+        overload="--overload" in sys.argv[1:],
+    )

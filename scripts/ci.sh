@@ -63,8 +63,94 @@ if fail:
 print("compile-counter + fusion gate OK")
 EOF
 
-echo "== serving smoke: bench_serving --smoke (writes BENCH_serving.smoke.json) =="
-python -m benchmarks.bench_serving --smoke
+echo "== gate: fault injection — every named site recovers (DESIGN.md §10) =="
+python - <<'EOF'
+import sys
+
+import numpy as np
+
+from repro.core import dd_matrix
+from repro.core.executors import clear_compile_cache, drain_memo_stats
+from repro.errors import DrainError, NumericalError
+from repro.linalg import run_lu
+from repro.serve import BatchServer
+from repro.testing import faults
+
+fail = []
+
+
+def check(cond, msg):
+    if not cond:
+        fail.append(msg)
+
+
+def lu_ok(a, **kw):
+    l, u = run_lu(a, partitions=((2, 2),), **kw)
+    return np.allclose(np.asarray(l) @ np.asarray(u), np.asarray(a), atol=2e-4)
+
+
+a = dd_matrix(32, seed=0)
+# leaf.fn / executor.launch / memo.capture: raise mid-drain, then the very
+# next identical call must succeed with a clean memo (no half capture)
+for site in ("leaf.fn", "executor.launch", "memo.capture"):
+    clear_compile_cache()
+    try:
+        with faults.inject(site, RuntimeError("armed")):
+            run_lu(a, partitions=((2, 2),))
+        check(False, f"{site}: armed fault did not fire")
+    except RuntimeError:
+        pass
+    check(drain_memo_stats()["entries"] == 0, f"{site}: half-captured memo entry")
+    check(lu_ok(a), f"{site}: post-failure drain wrong or failed")
+    check(drain_memo_stats()["entries"] == 1, f"{site}: recovery drain not memoized")
+
+# executor.output: corruption is caught by check_finite as NumericalError
+clear_compile_cache()
+try:
+    with faults.inject("executor.output"):
+        run_lu(a, partitions=((2, 2),), check_finite=True)
+    check(False, "executor.output: corruption not detected")
+except NumericalError:
+    pass
+check(lu_ok(a, check_finite=True), "executor.output: post-corruption drain wrong")
+
+# split.value_dependent: stacked drain falls back interleaved, same numerics
+clear_compile_cache()
+srv = BatchServer(graph="g2")
+futs = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(4)]
+with faults.inject("split.value_dependent", times=None):
+    rep = srv.tick()
+check(rep.stacked_drains == 0, "split.value_dependent: stacked path did not abort")
+check(rep.resolved == 4, "split.value_dependent: fallback lost requests")
+for s, f in enumerate(futs):
+    l, u = f.result()
+    check(
+        np.allclose(np.asarray(l) @ np.asarray(u),
+                    np.asarray(dd_matrix(32, seed=s)), atol=2e-4),
+        f"split.value_dependent: fallback numerics wrong (request {s})",
+    )
+
+# serve.drain: bisection isolates the poisoned request, tick never unwinds
+clear_compile_cache()
+srv = BatchServer(graph="g2", max_retries=0)
+futs = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(8)]
+rid = futs[2].rid
+with faults.inject("serve.drain", RuntimeError("poisoned"),
+                   when=lambda ctx: rid in ctx["rids"], times=None):
+    rep = srv.tick()
+check(rep.resolved == 7 and rep.failed == 1,
+      f"serve.drain: isolation failed ({rep.resolved} ok, {rep.failed} bad)")
+check(isinstance(futs[2].exception(), DrainError),
+      "serve.drain: poisoned future lacks DrainError")
+
+if fail:
+    print("FAULT GATE FAILED:\n  " + "\n  ".join(fail))
+    sys.exit(1)
+print(f"fault gate OK ({len(faults.KNOWN_SITES)} sites armed and recovered)")
+EOF
+
+echo "== serving smoke: bench_serving --smoke --overload (writes BENCH_serving.smoke.json) =="
+python -m benchmarks.bench_serving --smoke --overload
 
 echo "== gate: batched-serving stacking regressions =="
 python - <<'EOF'
@@ -94,6 +180,32 @@ if n16["seq_over_stacked"] < 1.0:
         f"stacked N=16 slower than sequential: "
         f"{n16['seq_over_stacked']:.2f}x"
     )
+# steady-state latency percentiles must be recorded (DESIGN.md §10)
+lat = r.get("latency", {})
+if not (lat.get("samples", 0) > 0 and lat.get("p99_ms", 0) >= lat.get("p50_ms", 0) > 0):
+    fail.append(f"steady-state latency percentiles missing/malformed: {lat}")
+# overload scenario: shedding + retry + poisoned-request isolation, with
+# every healthy request resolved — and none of it may leak into the
+# repeat-tick replay contract gated above
+ov = r.get("overload")
+if ov is None:
+    fail.append("overload section missing (bench_serving --overload)")
+else:
+    if ov["shed"] == 0:
+        fail.append("overload: nothing shed past max_pending")
+    if ov["retried"] < 1 or ov["failed"] < 1:
+        fail.append(
+            f"overload: poisoned request not retried+failed "
+            f"(retried={ov['retried']}, failed={ov['failed']})"
+        )
+    want = ov["submitted"] - ov["shed"] - ov["failed"]
+    if ov["resolved"] != want:
+        fail.append(
+            f"overload: {ov['resolved']} resolved != {want} expected"
+        )
+    olat = ov["latency"]
+    if not (olat["samples"] > 0 and olat["p99_ms"] >= olat["p50_ms"] > 0):
+        fail.append(f"overload latency percentiles malformed: {olat}")
 if fail:
     print("SERVING GATE FAILED:\n  " + "\n  ".join(fail))
     sys.exit(1)
@@ -101,7 +213,8 @@ print(
     f"serving gate OK (sweep {r['sweep_compiles']}/"
     f"{r['sweep_compile_budget']} compiles, N=16 stacked "
     f"{n16['seq_over_stacked']:.2f}x over sequential, "
-    f"{n16['seg_over_stacked']:.2f}x over segment-fused)"
+    f"{n16['seg_over_stacked']:.2f}x over segment-fused, overload "
+    f"{ov['resolved']}/{ov['submitted']} resolved with {ov['shed']} shed)"
 )
 EOF
 

@@ -18,6 +18,7 @@ from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
+from ..testing import faults
 from .executors.base import Executor
 from .executors.inline import InlineExecutor
 from .executors.jit_wave import _DRAIN_MEMO, JitWaveExecutor, PallasExecutor
@@ -132,7 +133,15 @@ class Dispatcher:
             self.executor.begin_capture(slot_of)
             stats_before = (self.stats["split"], self.stats["waves"])
             self._capture_valid = True
-        self._process_scope(roots, level=0)
+        try:
+            self._process_scope(roots, level=0)
+        except BaseException:
+            # failed drain hardening (DESIGN.md §10): discard the partial
+            # capture so no half-captured entry can reach the drain memo
+            # and the executor's capture window is closed for the retry
+            if capturing:
+                self.executor.end_capture()
+            raise
         if capturing:
             records, ok = self.executor.end_capture()
             if ok and self._capture_valid:
@@ -239,10 +248,23 @@ class Dispatcher:
             self._process_scope([template], level=0, collect=schedules)
         except _StackedAbort:
             done = None
+        except BaseException:
+            if capturing:
+                self.executor.end_capture()
+            raise
         else:
             slot_datas = self._root_datas([template])
             member_of = {d.id: ms for d, ms in zip(slot_datas, members)}
-            done = self.executor.execute_stacked(schedules, member_of, bucket)
+            try:
+                done = self.executor.execute_stacked(
+                    schedules, member_of, bucket
+                )
+            except BaseException:
+                # failed drain hardening (DESIGN.md §10): close the capture
+                # window so no half-captured entry survives into the memo
+                if capturing:
+                    self.executor.end_capture()
+                raise
         if done is None:
             # stacked path unavailable (non-grid-uniform schedule, or a
             # value-dependent split aborted the collect): discard the
@@ -376,7 +398,13 @@ class Dispatcher:
 
             for t in wave:
                 if t.op.can_split(t):
-                    if not t.op.memoizable:
+                    # the fault site makes a matched split behave exactly
+                    # like a value-dependent (non-memoizable) one, so the
+                    # _StackedAbort fallback and the capture opt-out are
+                    # exercisable without a bespoke Operation (DESIGN.md §10)
+                    if not t.op.memoizable or faults.fires(
+                        "split.value_dependent", op=t.op.name, level=level
+                    ):
                         if collect is not None:
                             # collect mode defers all execution, but a
                             # value-dependent split may read values earlier

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...testing import faults
 from ..data import GData, StackedEpoch, from_grid, to_grid
 from ..task import GTask, TaskState
 from .base import Executor, group_wave
@@ -206,13 +207,23 @@ class JitWaveExecutor(Executor):
         LIST of member handles for that root slot; they are restacked (with
         pow2 padding) and the per-lane results handed back as lanes of a
         shared ``StackedEpoch`` (DESIGN.md §7)."""
+        faults.fire(
+            "executor.launch", batch=rec.batch, n_tasks=rec.n_tasks,
+            replay=True,
+        )
         if rec.batch is not None:
             grids = self._stack_grids(datas, rec.blocks, rec.batch)
             outs = rec.fn(grids, rec.idxs)
+            outs = faults.corrupt(
+                "executor.output", outs, batch=rec.batch, replay=True
+            )
             self._adopt_stacked(datas, outs, rec.blocks)
         else:
             grids, _ = self._enter_grids(datas, rec.blocks)
             outs = rec.fn(grids, rec.idxs)
+            outs = faults.corrupt(
+                "executor.output", outs, batch=None, replay=True
+            )
             for data, g in zip(datas, outs):
                 data.set_grid(g)
         self.stats["tasks"] += rec.n_tasks
@@ -373,7 +384,14 @@ class JitWaveExecutor(Executor):
             self._fn_cache[key] = fn
             self.stats["compiles"] += 1
         idxs = plan.flat_idxs  # built once at plan time, device-resident
+        faults.fire(
+            "executor.launch", batch=batch, n_tasks=len(plan.tasks),
+            replay=False,
+        )
         outs = fn(grids, idxs)
+        outs = faults.corrupt(
+            "executor.output", outs, batch=batch, replay=False
+        )
         if stack is not None:
             self._adopt_stacked(member_lists, outs, plan.blocks)
         else:
@@ -384,6 +402,7 @@ class JitWaveExecutor(Executor):
             if -1 in slots:
                 self._capture_ok = False  # touches a non-root-arg datum
             else:
+                faults.fire("memo.capture", batch=batch)
                 self._capture.append(
                     ProgramRecord(
                         fn,

@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...testing import faults
 from ..data import GData
 from ..task import GTask
 from .base import group_wave
@@ -368,6 +369,7 @@ def build_program(
     steps = []
     base = 0
     for g in plan.groups():
+        faults.fire("leaf.fn", op=g.op.name, backend=backend)
         fused = g.op.grid_fused_fn(backend)
         if (
             fused is not None

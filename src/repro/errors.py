@@ -1,0 +1,61 @@
+"""Error taxonomy for drains and batched serving (DESIGN.md §10).
+
+Every failure the runtime can surface to a caller is an instance of
+``ServeError`` (or a plain exception wrapped into one at the serving
+boundary), so application code can catch one base class and branch on the
+concrete type:
+
+    ServeError
+    ├── DrainError        a dispatcher drain raised (compile/launch/capture
+    │                     failure); ``__cause__`` carries the original
+    ├── NumericalError    a drain completed but produced non-finite values
+    │                     (singular pivot, overflow) — deterministic, so
+    │                     NEVER retried
+    ├── DeadlineExceeded  the request's deadline passed before it was
+    │                     drained; the request was failed WITHOUT draining
+    └── RejectedError     admission control shed the request (queue at
+                          ``max_pending``) — it was never queued/drained
+
+The taxonomy lives at the top level (not under ``serve/``) because the
+drain-side surfaces raise it too: ``run_lu(check_finite=True)`` raises
+``NumericalError`` directly, with no serving stack involved.
+"""
+
+from __future__ import annotations
+
+
+class ServeError(Exception):
+    """Base class for every runtime-surfaced drain/serving failure."""
+
+
+class DrainError(ServeError):
+    """A dispatcher drain raised; the original exception is ``__cause__``.
+
+    Transient by assumption (executor hiccup, injected fault): the serving
+    layer retries these within the request's retry budget.
+    """
+
+
+class NumericalError(ServeError):
+    """A drain completed but the result contains non-finite values.
+
+    Deterministic (re-running the same request reproduces it), so the
+    serving layer fails the request immediately, never retries.
+    """
+
+
+class DeadlineExceeded(ServeError):
+    """The request's deadline expired before it was drained."""
+
+
+class RejectedError(ServeError):
+    """Admission control rejected the request (overload shedding)."""
+
+
+__all__ = [
+    "DeadlineExceeded",
+    "DrainError",
+    "NumericalError",
+    "RejectedError",
+    "ServeError",
+]

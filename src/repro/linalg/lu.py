@@ -34,7 +34,26 @@ import jax.numpy as jnp
 
 from ..core import Dispatcher, GData, GTask
 from ..core.data import from_grid
+from ..errors import NumericalError
 from .ops import GETRF, LUSOLVE, TRSML, TRSMU, TRSMUL
+
+
+def check_finite_result(name: str, *arrays: jnp.ndarray) -> None:
+    """Raise ``NumericalError`` if any result array is non-finite.
+
+    The pivot-free expansions have no singular-pivot detection (the paper's
+    fixed task-flow shape), so a zero pivot silently propagates inf/NaN
+    through the trailing updates; ``check_finite=True`` on the run_* entry
+    points turns that into a typed error instead of serving garbage
+    (DESIGN.md §10).  Opt-in: the check forces materialization (de-grids a
+    resident result), which the hot replay paths must not pay by default.
+    """
+    for a in arrays:
+        if a is not None and not bool(jnp.isfinite(a).all()):
+            raise NumericalError(
+                f"{name}: non-finite values in result (singular pivot or "
+                f"overflow; input not factorizable without pivoting?)"
+            )
 
 
 def utp_getrf(dispatcher: Dispatcher, A: GData) -> GTask:
@@ -110,17 +129,22 @@ def run_lu(
     graph: str = "g2",
     partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
     mesh=None,
+    check_finite: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Pivot-free blocked LU of ``a``; returns (L, U) unpacked.
 
     ``a`` must admit LU without pivoting (e.g. diagonally dominant or
-    already factored-friendly); there is no singular-pivot detection, as in
-    the paper's fixed task-flow expansion.
+    already factored-friendly); the task-flow expansion itself has no
+    singular-pivot detection (the paper's fixed shape), but
+    ``check_finite=True`` validates the drained factor and raises
+    ``NumericalError`` instead of returning inf/NaN (DESIGN.md §10).
     """
     d = Dispatcher(graph=graph, mesh=mesh)
     A = GData(a.shape, partitions=partitions, dtype=a.dtype, value=jnp.asarray(a))
     utp_getrf(d, A)
     d.run()
+    if check_finite:
+        check_finite_result("run_lu", A.value)
     return _unpack(A)
 
 
@@ -186,6 +210,7 @@ def run_solve(
     b_partitions: Tuple[Tuple[int, int], ...] = None,
     mesh=None,
     side: Optional[str] = None,
+    check_finite: bool = False,
 ) -> jnp.ndarray:
     """Blocked triangular solve as a task workload.
 
@@ -206,6 +231,8 @@ def run_solve(
     )
     utp_solve(d, A, B, lower=lower, side=side)
     d.run()
+    if check_finite:
+        check_finite_result("run_solve", B.value)
     return B.value
 
 
@@ -216,6 +243,7 @@ def run_lu_solve(
     partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
     b_partitions: Tuple[Tuple[int, int], ...] = None,
     mesh=None,
+    check_finite: bool = False,
 ) -> jnp.ndarray:
     """Solve ``a @ x == b`` by pivot-free LU — factor AND solve in ONE drain.
 
@@ -226,7 +254,9 @@ def run_lu_solve(
     same single-drain/zero-recompile behaviour ``run_lu`` has, now for the
     full solve (DESIGN.md §4).  Matches ``jax.scipy.linalg.lu_solve`` on
     inputs where partial pivoting selects P == I (e.g. column-diagonally-
-    dominant ``a``); like ``run_lu`` there is no singular-pivot detection.
+    dominant ``a``); like ``run_lu``, the expansion has no singular-pivot
+    detection, but ``check_finite=True`` raises ``NumericalError`` on a
+    non-finite solution instead of returning it (DESIGN.md §10).
 
     ``b`` may be a matrix ``(n, m)`` or a vector ``(n,)``; ``b_partitions``
     defaults to ``partitions`` with the column counts collapsed to 1 for a
@@ -248,6 +278,8 @@ def run_lu_solve(
     utp_lu_solve(d, A, B)
     d.run()
     x = B.value
+    if check_finite:
+        check_finite_result("run_lu_solve", x)
     return x[:, 0] if vec else x
 
 

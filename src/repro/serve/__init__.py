@@ -7,11 +7,33 @@ single-program compiler into a serving engine.  Each request returns a
 ``ServeFuture`` resolved at tick time; results are extracted lazily from
 the shared stacked result grids.
 
+Serving is fault-contained (DESIGN.md §10): a failing drain is bisected to
+isolate the poisoned request(s), transient failures retry with backoff,
+requests carry deadlines, and ``max_pending`` bounds the queue with
+explicit overload shedding.  The error taxonomy lives in ``repro.errors``
+and is re-exported here for convenience.
+
 This is the task-layer analog of ``repro/serving`` (the LM token engine):
 same continuous-batching shape, but the unit of work is a whole task-graph
 drain rather than a decode step.
 """
 
+from ..errors import (
+    DeadlineExceeded,
+    DrainError,
+    NumericalError,
+    RejectedError,
+    ServeError,
+)
 from .server import BatchServer, ServeFuture, TickReport
 
-__all__ = ["BatchServer", "ServeFuture", "TickReport"]
+__all__ = [
+    "BatchServer",
+    "DeadlineExceeded",
+    "DrainError",
+    "NumericalError",
+    "RejectedError",
+    "ServeError",
+    "ServeFuture",
+    "TickReport",
+]

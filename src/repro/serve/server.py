@@ -9,6 +9,20 @@ one launch, and a structurally repeated tick replays with zero Python
 re-splitting and zero recompiles (the drain memo's stacked key is
 independent of the exact N inside a bucket).
 
+Failure model (DESIGN.md §10): a failing drain never unwinds the serving
+loop.  A chunk whose drain raises is BISECTED — log2 re-drains over pow2
+halves (which replay from the drain memo's bucket programs) isolate the
+poisoned request(s); healthy requests resolve in the same tick, only the
+culprits fail, with a typed error (``DrainError``/``NumericalError``) on
+their futures.  Transient failures consume a bounded per-request retry
+budget with exponential tick backoff.  ``check_finite=True`` additionally
+validates result lanes after every successful drain (one fused reduce over
+the shared stacked epoch grid — no per-request de-grid), failing exactly
+the non-finite lanes with ``NumericalError``.  Requests carry optional
+deadlines (expired requests fail with ``DeadlineExceeded`` WITHOUT being
+drained), and ``max_pending`` bounds the queue with explicit overload
+shedding (``RejectedError``; reject-new or drop-oldest policy).
+
 The generic surface is ``submit(op_name, arrays, ...)`` for any registered
 Operation; ``lu``, ``lu_solve``, and ``cholesky`` are typed conveniences
 that attach the right partitions and result extraction.
@@ -17,25 +31,42 @@ that attach the right partitions and result extraction.
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import Dispatcher, GData, GTask
 from ..core.operation import OpRegistry
+from ..errors import (
+    DeadlineExceeded,
+    DrainError,
+    NumericalError,
+    RejectedError,
+    ServeError,
+)
 from ..linalg.lu import _unpack
+from ..testing import faults
 
 _rid = itertools.count()
+
+#: errors that re-running the same request deterministically reproduces —
+#: failing fast beats burning the retry budget on them
+_NON_RETRYABLE = (NumericalError, DeadlineExceeded, RejectedError)
 
 
 class ServeFuture:
     """Per-request result handle: resolved at tick time, materialized lazily.
 
     ``result()`` raises if the request has not been drained yet (call
-    ``BatchServer.tick()`` first).  Extraction is lazy: resolving stores a
-    thunk over the request's data handles, so a tick never pays per-request
-    de-grid work for results nobody reads.
+    ``BatchServer.tick()`` first) and re-raises the typed ``ServeError`` if
+    the request failed; ``exception()`` mirrors ``concurrent.futures``:
+    the error for a failed request, ``None`` for a resolved one.
+    Extraction is lazy: resolving stores a thunk over the request's data
+    handles, so a tick never pays per-request de-grid work for results
+    nobody reads.
     """
 
     def __init__(self, rid: int, signature: tuple):
@@ -51,23 +82,38 @@ class ServeFuture:
         return self._thunk is not None or self._error is not None
 
     def _resolve(self, thunk: Callable[[], Any]) -> None:
-        self._thunk = thunk
+        if not self.done:
+            self._thunk = thunk
 
     def _fail(self, error: BaseException) -> None:
-        self._error = error
+        if not self.done:
+            self._error = error
+
+    def _pending_error(self) -> RuntimeError:
+        op = self.signature[1] if len(self.signature) > 1 else "?"
+        return RuntimeError(
+            f"request rid={self.rid} (op={op!r}, graph={self.signature[0]!r}) "
+            f"is not drained yet — call BatchServer.tick() to serve it"
+        )
 
     def result(self) -> Any:
         if self._error is not None:
             raise self._error
         if self._thunk is None:
-            raise RuntimeError(
-                f"request {self.rid} not drained yet — call BatchServer.tick()"
-            )
+            raise self._pending_error()
         if not self._materialized:
             self._value = self._thunk()
             self._materialized = True
             self._thunk = lambda: self._value
         return self._value
+
+    def exception(self) -> Optional[BaseException]:
+        """The request's error (a ``ServeError`` subtype), or ``None`` if
+        it resolved successfully.  Raises the pending ``RuntimeError`` if
+        the request has not been drained yet."""
+        if not self.done:
+            raise self._pending_error()
+        return self._error
 
 
 @dataclass
@@ -76,13 +122,29 @@ class _Pending:
     op: object
     datas: List[GData]
     extract: Callable[[List[GData]], Any]
+    # pristine inputs, kept so a retry can rebuild ``datas`` from scratch —
+    # a failed drain may have partially overwritten the in-place results
+    # (DESIGN.md §10 donation/retry caveat)
+    arrays: List[jnp.ndarray] = field(default_factory=list)
+    parts: List[tuple] = field(default_factory=list)
+    enqueue_t: float = 0.0
+    deadline: Optional[float] = None  # absolute clock time, or None
+    retries_left: int = 0
+    attempts: int = 0  # failed drain attempts so far
+    not_before: int = 0  # earliest tick number eligible (retry backoff)
+
+    def rebuild_datas(self) -> None:
+        self.datas = [
+            GData(a.shape, partitions=p, dtype=a.dtype, value=a)
+            for a, p in zip(self.arrays, self.parts)
+        ]
 
 
 @dataclass
 class TickReport:
     """What one ``tick()`` did, per signature bucket and in total."""
 
-    requests: int = 0
+    requests: int = 0  # completed this tick: resolved + failed + expired
     buckets: int = 0
     drains: int = 0
     launches: int = 0
@@ -91,6 +153,15 @@ class TickReport:
     memo_hits: int = 0
     memo_misses: int = 0
     per_bucket: List[dict] = field(default_factory=list)
+    # failure/latency accounting (DESIGN.md §10)
+    resolved: int = 0
+    failed: int = 0
+    expired: int = 0
+    retried: int = 0
+    bisected: int = 0  # failed chunks that entered bisection
+    pending_after: int = 0
+    p50_ms: float = 0.0
+    p99_ms: float = 0.0
 
 
 class BatchServer:
@@ -100,17 +171,58 @@ class BatchServer:
     additional chunks in the same tick); it must be a power of two so full
     chunks match compiled-program buckets exactly (a 48-cap would pad
     every full chunk to the 64 bucket — 33% junk lanes forever).
+
+    ``max_pending`` bounds the queue: once reached, ``submit`` sheds per
+    ``overload_policy`` — "reject" fails the NEW request's future with
+    ``RejectedError``; "drop_oldest" evicts the oldest queued request
+    (failing ITS future) and admits the new one.  ``max_retries`` is the
+    default per-request retry budget for transient drain failures;
+    ``retry_backoff`` scales the exponential tick backoff between
+    attempts.  ``check_finite=True`` validates result lanes after every
+    drain (NumericalError on the poisoned lanes only).  ``clock`` is
+    injectable for deterministic deadline tests.
     """
 
-    def __init__(self, graph: str = "g2", mesh=None, max_batch: int = 64):
+    def __init__(
+        self,
+        graph: str = "g2",
+        mesh=None,
+        max_batch: int = 64,
+        max_pending: Optional[int] = None,
+        overload_policy: str = "reject",
+        max_retries: int = 1,
+        retry_backoff: int = 1,
+        check_finite: bool = False,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(
                 f"max_batch must be a power of two >= 1, got {max_batch}"
             )
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if overload_policy not in ("reject", "drop_oldest"):
+            raise ValueError(
+                f"overload_policy must be 'reject' or 'drop_oldest', "
+                f"got {overload_policy!r}"
+            )
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff < 1:
+            raise ValueError(f"retry_backoff must be >= 1, got {retry_backoff}")
         self.graph = graph
         self.mesh = mesh
         self.max_batch = max_batch
+        self.max_pending = max_pending
+        self.overload_policy = overload_policy
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
+        self.check_finite = check_finite
+        self._clock = clock
         self._queues: Dict[tuple, List[_Pending]] = {}
+        # rolling window of resolved-request latencies (ms) for p50/p99
+        self._latencies: List[float] = []
+        self._latency_window = 4096
         self.stats: Dict[str, int] = {
             "requests": 0,
             "ticks": 0,
@@ -120,6 +232,12 @@ class BatchServer:
             "memo_hits": 0,
             "memo_misses": 0,
             "stacked_drains": 0,
+            "resolved": 0,
+            "failed": 0,
+            "expired": 0,
+            "retried": 0,
+            "shed": 0,
+            "bisected": 0,
         }
 
     # -- request surface -------------------------------------------------------
@@ -129,12 +247,23 @@ class BatchServer:
         arrays: Sequence[jnp.ndarray],
         partitions: Sequence[Tuple[Tuple[int, int], ...]],
         extract: Optional[Callable[[List[GData]], Any]] = None,
+        *,
+        deadline: Optional[float] = None,
+        max_retries: Optional[int] = None,
     ) -> ServeFuture:
         """Queue one request: ``op_name`` applied to ``arrays`` (one root
         task).  ``partitions`` gives each argument's partition levels;
         ``extract(datas)`` builds the result from the drained data handles
         (default: the last argument's value — the written-in-place result
-        convention of the linalg families)."""
+        convention of the linalg families).
+
+        ``deadline`` is seconds from now: a request still queued when it
+        expires fails with ``DeadlineExceeded`` instead of being drained.
+        ``max_retries`` overrides the server's transient-failure retry
+        budget for this request.  Under overload (``max_pending`` reached)
+        the request may be shed: the returned future then already carries
+        ``RejectedError`` (policy "reject"), or the oldest queued request
+        is evicted to make room (policy "drop_oldest")."""
         op = OpRegistry.get(op_name)
         if len(arrays) != len(partitions):
             raise ValueError(
@@ -153,24 +282,73 @@ class BatchServer:
             ),
         )
         fut = ServeFuture(next(_rid), sig)
+        self.stats["requests"] += 1
+        if self.max_pending is not None and self.pending() >= self.max_pending:
+            if not self._shed_for(fut):
+                return fut  # rejected: future already failed
         if extract is None:
             extract = lambda ds: ds[-1].value
+        now = self._clock()
         self._queues.setdefault(sig, []).append(
-            _Pending(fut, op, datas, extract)
+            _Pending(
+                fut,
+                op,
+                datas,
+                extract,
+                arrays=[d.value for d in datas],
+                parts=[d.partitions for d in datas],
+                enqueue_t=now,
+                deadline=None if deadline is None else now + deadline,
+                retries_left=(
+                    self.max_retries if max_retries is None else max_retries
+                ),
+            )
         )
-        self.stats["requests"] += 1
         return fut
 
+    def _shed_for(self, fut: ServeFuture) -> bool:
+        """Apply the overload policy; returns True if ``fut`` may enqueue."""
+        self.stats["shed"] += 1
+        if self.overload_policy == "reject":
+            fut._fail(
+                RejectedError(
+                    f"request rid={fut.rid} rejected: queue at max_pending="
+                    f"{self.max_pending} (policy 'reject')"
+                )
+            )
+            return False
+        # drop_oldest: evict the globally oldest queued request (min rid —
+        # rids are assigned in submission order) and admit the new one
+        sig = min(
+            (q[0].future.rid, s) for s, q in self._queues.items() if q
+        )[1]
+        victim = self._queues[sig].pop(0)
+        if not self._queues[sig]:
+            del self._queues[sig]
+        victim.future._fail(
+            RejectedError(
+                f"request rid={victim.future.rid} dropped: queue at "
+                f"max_pending={self.max_pending} (policy 'drop_oldest')"
+            )
+        )
+        return True
+
     def lu(
-        self, a, partitions: Tuple[Tuple[int, int], ...] = ((4, 4),)
+        self,
+        a,
+        partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+        **kw,
     ) -> ServeFuture:
         """Queue a pivot-free LU; resolves to (L, U) unpacked."""
         return self.submit(
-            "getrf", [a], [partitions], extract=lambda ds: _unpack(ds[0])
+            "getrf", [a], [partitions], extract=lambda ds: _unpack(ds[0]), **kw
         )
 
     def cholesky(
-        self, a, partitions: Tuple[Tuple[int, int], ...] = ((4, 4),)
+        self,
+        a,
+        partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
+        **kw,
     ) -> ServeFuture:
         """Queue a Cholesky factorization; resolves to the lower factor."""
         return self.submit(
@@ -178,6 +356,7 @@ class BatchServer:
             [a],
             [partitions],
             extract=lambda ds: jnp.tril(ds[0].value),
+            **kw,
         )
 
     def lu_solve(
@@ -186,6 +365,7 @@ class BatchServer:
         b,
         partitions: Tuple[Tuple[int, int], ...] = ((4, 4),),
         b_partitions: Tuple[Tuple[int, int], ...] = None,
+        **kw,
     ) -> ServeFuture:
         """Queue ``a @ x == b`` (composed factor+solve, one root task);
         resolves to x.  ``b`` may be a vector or a matrix, as in
@@ -204,68 +384,78 @@ class BatchServer:
             (lambda ds: ds[1].value[:, 0]) if vec else (lambda ds: ds[1].value)
         )
         return self.submit(
-            "lu_solve", [a, b2], [partitions, b_partitions], extract=extract
+            "lu_solve", [a, b2], [partitions, b_partitions], extract=extract,
+            **kw,
         )
 
     # -- serving loop ----------------------------------------------------------
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    def tick(self) -> TickReport:
-        """Drain every queued request: one stacked drain per signature
-        bucket (chunked at ``max_batch``), resolve the futures.
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p99 (ms) over the rolling resolved-request latency window."""
+        if not self._latencies:
+            return {"p50_ms": 0.0, "p99_ms": 0.0, "samples": 0}
+        arr = np.asarray(self._latencies)
+        return {
+            "p50_ms": float(np.percentile(arr, 50)),
+            "p99_ms": float(np.percentile(arr, 99)),
+            "samples": len(arr),
+        }
 
-        Failure containment: if a chunk's drain raises, that chunk's
-        futures carry the error (``result()`` re-raises it), every
-        not-yet-drained request stays queued for the next tick, and the
-        exception propagates to the tick caller — nothing is stranded."""
-        queues, self._queues = self._queues, {}
-        chunks: List[Tuple[tuple, List[_Pending]]] = [
-            (sig, pending[lo : lo + self.max_batch])
-            for sig, pending in queues.items()
-            for lo in range(0, len(pending), self.max_batch)
-        ]
-        report = TickReport()
-        report.buckets = len(queues)
+    def tick(self) -> TickReport:
+        """Drain every eligible queued request: one stacked drain per
+        signature bucket (chunked at ``max_batch``), resolve the futures.
+
+        Failure containment (DESIGN.md §10): the serving loop never
+        unwinds.  Deadline-expired requests fail with ``DeadlineExceeded``
+        without draining; a chunk whose drain raises is bisected to
+        isolate the culprits (healthy requests resolve in this same tick);
+        isolated transient failures consume the request's retry budget and
+        re-queue IN FIFO ORDER with exponential tick backoff, carrying
+        their retry count; exhausted or deterministic failures land on the
+        future as a typed ``ServeError``."""
+        tick_no = self.stats["ticks"]
         self.stats["ticks"] += 1
-        for ci, (sig, chunk) in enumerate(chunks):
-            d = Dispatcher(graph=self.graph, mesh=self.mesh)
-            for p in chunk:
-                d.submit_task(
-                    GTask(p.op, None, [dd.root_view() for dd in p.datas])
+        now = self._clock()
+        report = TickReport()
+        queues, self._queues = self._queues, {}
+        held: Dict[tuple, List[_Pending]] = {}
+        ready: Dict[tuple, List[_Pending]] = {}
+        for sig, pend in queues.items():
+            for p in pend:
+                if p.deadline is not None and now >= p.deadline:
+                    self._finish_fail(
+                        p,
+                        DeadlineExceeded(
+                            f"request rid={p.future.rid} ({p.op.name}) "
+                            f"deadline expired before drain"
+                        ),
+                        report,
+                        expired=True,
+                    )
+                elif p.not_before > tick_no:
+                    held.setdefault(sig, []).append(p)  # retry backoff
+                else:
+                    ready.setdefault(sig, []).append(p)
+        report.buckets = len(ready)
+        retried: Dict[tuple, List[_Pending]] = {}
+        for sig, pend in ready.items():
+            for lo in range(0, len(pend), self.max_batch):
+                self._serve_chunk(
+                    sig, pend[lo : lo + self.max_batch], report, retried,
+                    tick_no,
                 )
-            try:
-                d.run()
-            except BaseException as e:
-                for p in chunk:
-                    p.future._fail(e)
-                for sig2, rest in chunks[ci + 1 :]:
-                    self._queues.setdefault(sig2, []).extend(rest)
-                raise
-            for p in chunk:
-                datas = p.datas
-                extract = p.extract
-                p.future._resolve(
-                    (lambda ds=datas, ex=extract: ex(ds))
-                )
-            est = d.executor.stats
-            bucket_stats = {
-                "signature": sig[1],
-                "requests": len(chunk),
-                "launches": int(est.get("launches", 0)),
-                "compiles": int(est.get("compiles", 0)),
-                "stacked": int(d.stats["stacked_drains"]),
-                "memo_hits": int(d.stats["memo_hits"]),
-                "memo_misses": int(d.stats["memo_misses"]),
-            }
-            report.per_bucket.append(bucket_stats)
-            report.requests += len(chunk)
-            report.drains += 1
-            report.launches += bucket_stats["launches"]
-            report.compiles += bucket_stats["compiles"]
-            report.stacked_drains += bucket_stats["stacked"]
-            report.memo_hits += bucket_stats["memo_hits"]
-            report.memo_misses += bucket_stats["memo_misses"]
+        # re-queue held + retried requests at the FRONT of their buckets,
+        # merged by rid (== global FIFO submission order): they are older
+        # than anything submitted after this tick
+        for sig in set(held) | set(retried):
+            front = sorted(
+                held.get(sig, []) + retried.get(sig, []),
+                key=lambda p: p.future.rid,
+            )
+            self._queues[sig] = front + self._queues.get(sig, [])
+        report.pending_after = self.pending()
         for k in (
             "drains",
             "launches",
@@ -273,6 +463,171 @@ class BatchServer:
             "memo_hits",
             "memo_misses",
             "stacked_drains",
+            "resolved",
+            "failed",
+            "expired",
+            "retried",
+            "bisected",
         ):
             self.stats[k] += getattr(report, k)
         return report
+
+    # -- chunk serving with lane isolation (DESIGN.md §10) ---------------------
+    def _serve_chunk(
+        self,
+        sig: tuple,
+        chunk: List[_Pending],
+        report: TickReport,
+        retried: Dict[tuple, List[_Pending]],
+        tick_no: int,
+    ) -> None:
+        try:
+            d = self._drain_chunk(chunk)
+        except Exception as e:  # noqa: BLE001 — typed at the future boundary
+            if len(chunk) == 1:
+                self._fail_or_retry(sig, chunk[0], e, report, retried, tick_no)
+                return
+            # bisect: pow2 halves hit the drain memo's bucket programs, so
+            # isolating k culprits in a chunk of C costs O(k log C) cheap
+            # re-drains, not C singleton drains
+            report.bisected += 1
+            mid = len(chunk) // 2
+            self._serve_chunk(sig, chunk[:mid], report, retried, tick_no)
+            self._serve_chunk(sig, chunk[mid:], report, retried, tick_no)
+            return
+        bad = self._nonfinite_members(chunk) if self.check_finite else ()
+        now = self._clock()
+        for i, p in enumerate(chunk):
+            if i in bad:
+                self._finish_fail(
+                    p,
+                    NumericalError(
+                        f"request rid={p.future.rid} ({p.op.name}): "
+                        f"non-finite values in result lane"
+                    ),
+                    report,
+                )
+                continue
+            datas, extract = p.datas, p.extract
+            p.future._resolve(lambda ds=datas, ex=extract: ex(ds))
+            report.resolved += 1
+            report.requests += 1
+            self._record_latency(report, (now - p.enqueue_t) * 1e3)
+        est = d.executor.stats
+        bucket_stats = {
+            "signature": sig[1],
+            "requests": len(chunk),
+            "launches": int(est.get("launches", 0)),
+            "compiles": int(est.get("compiles", 0)),
+            "stacked": int(d.stats["stacked_drains"]),
+            "memo_hits": int(d.stats["memo_hits"]),
+            "memo_misses": int(d.stats["memo_misses"]),
+        }
+        report.per_bucket.append(bucket_stats)
+        report.drains += 1
+        report.launches += bucket_stats["launches"]
+        report.compiles += bucket_stats["compiles"]
+        report.stacked_drains += bucket_stats["stacked"]
+        report.memo_hits += bucket_stats["memo_hits"]
+        report.memo_misses += bucket_stats["memo_misses"]
+
+    def _drain_chunk(self, chunk: List[_Pending]) -> Dispatcher:
+        faults.fire(
+            "serve.drain",
+            rids=[p.future.rid for p in chunk],
+            op=chunk[0].op.name,
+            size=len(chunk),
+        )
+        d = Dispatcher(graph=self.graph, mesh=self.mesh)
+        for p in chunk:
+            d.submit_task(
+                GTask(p.op, None, [dd.root_view() for dd in p.datas])
+            )
+        d.run()
+        return d
+
+    def _nonfinite_members(self, chunk: List[_Pending]) -> set:
+        """Indices of chunk members with any non-finite result datum.
+
+        Lane-isolated and cheap: members of a stacked drain share one
+        ``StackedEpoch``, so finiteness is ONE fused all-reduce over the
+        ``(B, nr, nc, br, bc)`` epoch grid yielding a per-lane mask —
+        nothing is de-gridded, healthy lanes stay lazily extracted."""
+        epoch_masks: Dict[int, np.ndarray] = {}
+        bad = set()
+        for i, p in enumerate(chunk):
+            for dd in p.datas:
+                lane = dd.lane
+                if lane is not None:
+                    ep, li = lane
+                    mask = epoch_masks.get(id(ep))
+                    if mask is None:
+                        mask = np.asarray(
+                            jnp.isfinite(ep.grid).all(axis=(1, 2, 3, 4))
+                        )
+                        epoch_masks[id(ep)] = mask
+                    ok = bool(mask[li])
+                elif dd.in_grid_epoch:
+                    ok = bool(jnp.isfinite(dd.grid).all())
+                elif dd.has_value:
+                    ok = bool(jnp.isfinite(dd.value).all())
+                else:
+                    ok = True
+                if not ok:
+                    bad.add(i)
+                    break
+        return bad
+
+    def _fail_or_retry(
+        self,
+        sig: tuple,
+        p: _Pending,
+        e: Exception,
+        report: TickReport,
+        retried: Dict[tuple, List[_Pending]],
+        tick_no: int,
+    ) -> None:
+        """One isolated failing request: consume retry budget or fail typed."""
+        if not isinstance(e, _NON_RETRYABLE) and p.retries_left > 0:
+            p.retries_left -= 1
+            p.attempts += 1
+            p.not_before = tick_no + self.retry_backoff * (2 ** (p.attempts - 1))
+            p.rebuild_datas()  # the failed drain may have mutated them
+            retried.setdefault(sig, []).append(p)
+            report.retried += 1
+            return
+        if isinstance(e, ServeError):
+            err = e
+        else:
+            err = DrainError(
+                f"request rid={p.future.rid} ({p.op.name}) drain failed "
+                f"after {p.attempts + 1} attempt(s): {e}"
+            )
+            err.__cause__ = e
+        self._finish_fail(p, err, report)
+
+    def _finish_fail(
+        self,
+        p: _Pending,
+        err: ServeError,
+        report: TickReport,
+        expired: bool = False,
+    ) -> None:
+        p.future._fail(err)
+        report.requests += 1
+        if expired:
+            report.expired += 1
+        else:
+            report.failed += 1
+
+    def _record_latency(self, report: TickReport, ms: float) -> None:
+        self._latencies.append(ms)
+        if len(self._latencies) > self._latency_window:
+            del self._latencies[: -self._latency_window]
+        # per-tick percentiles over THIS tick's resolved set (cheap: the
+        # slice is the tail appended above)
+        tail = self._latencies[-report.resolved :] if report.resolved else []
+        if tail:
+            arr = np.asarray(tail)
+            report.p50_ms = float(np.percentile(arr, 50))
+            report.p99_ms = float(np.percentile(arr, 99))

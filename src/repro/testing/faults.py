@@ -1,0 +1,241 @@
+"""Deterministic, seedable fault injection at named runtime sites.
+
+The recovery paths of the drain/serving stack (DESIGN.md §10) are only
+trustworthy if every one of them is exercisable on demand.  Production code
+is instrumented at a small set of NAMED SITES; a test (or the CI fault
+gate) arms a site with ``inject(...)`` and the instrumented code raises,
+corrupts, or diverts exactly as specified — deterministically by default
+(fire on the Nth match), or probabilistically with a seeded RNG.
+
+    with faults.inject("executor.launch", RuntimeError("device lost")):
+        run_lu(a)          # raises: the launch site fired
+
+    with faults.inject("serve.drain", NumericalError("poisoned"),
+                       when=lambda ctx: 7 in ctx["rids"], times=None):
+        srv.tick()         # every drain containing request 7 fails
+
+Sites (armed by name; arming an unknown name is an error):
+
+    leaf.fn                 resolving a group's leaf kernel at program
+                            build time raises (bad kernel / trace failure)
+    executor.launch         a compiled WaveProgram launch raises before
+                            executing (ctx: batch, n_tasks, replay)
+    executor.output         a completed program's output grids are passed
+                            through ``corrupt`` (default: all-NaN) —
+                            non-finite corruption without a raise
+    memo.capture            recording a ProgramRecord into the drain
+                            capture raises (mid-drain, after the program
+                            ran) — exercises memo-cleanliness invariants
+    split.value_dependent   boolean site: a matched task split is treated
+                            as value-dependent (non-memoizable), forcing
+                            the ``_StackedAbort`` collect-mode fallback
+    serve.drain             a ``BatchServer`` chunk drain raises before
+                            dispatching (ctx: rids, op, size) — the
+                            request-attributable failure bisection hunts
+
+Pure stdlib; importable from production code with near-zero cost when no
+fault is armed (one module-flag check per site call).
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+from contextlib import contextmanager
+from typing import Any, Callable, Dict, List, Optional
+
+KNOWN_SITES = frozenset(
+    {
+        "leaf.fn",
+        "executor.launch",
+        "executor.output",
+        "memo.capture",
+        "split.value_dependent",
+        "serve.drain",
+    }
+)
+
+
+class Fault:
+    """One armed fault: firing rule + effect + observability counters.
+
+    ``matches`` counts site hits that passed ``when``; ``fired`` counts the
+    subset that actually took effect (after ``after``/``times``/``p``).
+    ``log`` keeps the ctx dict of every firing when ``record=True`` — a
+    pure probe (``exc=None, record=True``) observes a site without
+    perturbing it, which tests use to assert drain order.
+    """
+
+    def __init__(
+        self,
+        site: str,
+        exc: Optional[BaseException] = None,
+        *,
+        when: Optional[Callable[[dict], bool]] = None,
+        times: Optional[int] = 1,
+        after: int = 0,
+        p: float = 1.0,
+        seed: int = 0,
+        corrupt: Optional[Callable[[Any], Any]] = None,
+        record: bool = False,
+    ):
+        if site not in KNOWN_SITES:
+            raise ValueError(
+                f"unknown fault site {site!r}; known: {sorted(KNOWN_SITES)}"
+            )
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"fault probability must be in [0, 1], got {p}")
+        self.site = site
+        self.exc = exc
+        self.when = when
+        self.times = times
+        self.after = after
+        self.p = p
+        self.corrupt = corrupt
+        self.record = record
+        self._rng = random.Random(seed)
+        self.matches = 0
+        self.fired = 0
+        self.log: List[dict] = []
+
+    def _take(self, ctx: dict) -> bool:
+        """Decide (and account) whether this fault fires for ``ctx``."""
+        if self.when is not None and not self.when(ctx):
+            return False
+        self.matches += 1
+        if self.matches <= self.after:
+            return False
+        if self.times is not None and self.fired >= self.times:
+            return False
+        if self.p < 1.0 and self._rng.random() >= self.p:
+            return False
+        self.fired += 1
+        if self.record:
+            self.log.append(dict(ctx))
+        return True
+
+    def _raise(self) -> None:
+        exc = self.exc
+        if callable(exc) and not isinstance(exc, BaseException):
+            exc = exc()
+        if exc is not None:
+            raise exc
+
+
+_LOCK = threading.Lock()
+_ACTIVE: Dict[str, List[Fault]] = {}
+_ENABLED = False  # fast-path flag: sites bail on this before any lookup
+
+
+def active() -> bool:
+    """True iff any fault is currently armed."""
+    return _ENABLED
+
+
+@contextmanager
+def inject(
+    site: str,
+    exc: Optional[BaseException] = None,
+    *,
+    when: Optional[Callable[[dict], bool]] = None,
+    times: Optional[int] = 1,
+    after: int = 0,
+    p: float = 1.0,
+    seed: int = 0,
+    corrupt: Optional[Callable[[Any], Any]] = None,
+    record: bool = False,
+):
+    """Arm ``site`` for the duration of the ``with`` block; yields the
+    ``Fault`` so the caller can assert on ``fired``/``matches``/``log``.
+
+    ``times=1`` (default) fires once then disarms logically — the standard
+    transient-fault shape; ``times=None`` fires on every match — the
+    deterministic poisoned-request shape.  ``after=k`` skips the first k
+    matches; ``p``/``seed`` make firing probabilistic but reproducible.
+    """
+    fault = Fault(
+        site,
+        exc,
+        when=when,
+        times=times,
+        after=after,
+        p=p,
+        seed=seed,
+        corrupt=corrupt,
+        record=record,
+    )
+    global _ENABLED
+    with _LOCK:
+        _ACTIVE.setdefault(site, []).append(fault)
+        _ENABLED = True
+    try:
+        yield fault
+    finally:
+        with _LOCK:
+            lst = _ACTIVE.get(site)
+            if lst and fault in lst:  # robust to a reset() mid-block
+                lst.remove(fault)
+                if not lst:
+                    del _ACTIVE[site]
+            _ENABLED = bool(_ACTIVE)
+
+
+def reset() -> None:
+    """Disarm everything (test-teardown safety net)."""
+    global _ENABLED
+    with _LOCK:
+        _ACTIVE.clear()
+        _ENABLED = False
+
+
+def fire(site: str, **ctx) -> None:
+    """Raising site: raise the armed fault's exception if one fires."""
+    if not _ENABLED:
+        return
+    for fault in _ACTIVE.get(site, ()):
+        if fault._take(ctx):
+            fault._raise()
+
+
+def fires(site: str, **ctx) -> bool:
+    """Boolean site: True if any armed fault fires (no raise)."""
+    if not _ENABLED:
+        return False
+    hit = False
+    for fault in _ACTIVE.get(site, ()):
+        if fault._take(ctx):
+            fault._raise()  # raising faults still raise here
+            hit = True
+    return hit
+
+
+def _nan_like(value):
+    import jax.numpy as jnp
+
+    if isinstance(value, (tuple, list)):
+        return type(value)(_nan_like(v) for v in value)
+    return jnp.full_like(value, jnp.nan)
+
+
+def corrupt(site: str, value, **ctx):
+    """Corruption site: pass ``value`` through each firing fault's
+    ``corrupt`` callable (default: replace every array with NaNs)."""
+    if not _ENABLED:
+        return value
+    for fault in _ACTIVE.get(site, ()):
+        if fault._take(ctx):
+            fn = fault.corrupt if fault.corrupt is not None else _nan_like
+            value = fn(value)
+    return value
+
+
+__all__ = [
+    "Fault",
+    "KNOWN_SITES",
+    "active",
+    "corrupt",
+    "fire",
+    "fires",
+    "inject",
+    "reset",
+]

@@ -1,9 +1,12 @@
-"""BatchServer: signature-bucketed batched serving (DESIGN.md §7).
+"""BatchServer: signature-bucketed batched serving (DESIGN.md §7, §10).
 
 Covers: future resolution + numerics for lu / cholesky / lu_solve requests
 (vector and matrix right-hand sides), per-signature bucketing inside one
 tick, the repeat-tick contract (0 compiles / 1 launch / 1 stacked drain per
-signature bucket), max_batch chunking, and the unresolved-future error.
+signature bucket), max_batch chunking, the unresolved-future error, and the
+failure model — bisect isolation of poisoned requests, lane-isolated finite
+checks, deadlines, admission control, retry budget/backoff, FIFO re-queue
+ordering, and latency percentiles.
 """
 
 import numpy as np
@@ -13,8 +16,21 @@ import jax.numpy as jnp
 
 from repro.core import dd_matrix, spd_matrix
 from repro.core.executors import clear_compile_cache
+from repro.errors import (
+    DeadlineExceeded,
+    DrainError,
+    NumericalError,
+    RejectedError,
+)
 from repro.linalg import run_lu, run_lu_solve
 from repro.serve import BatchServer
+from repro.testing import faults
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_faults():
+    yield
+    faults.reset()
 
 
 def _rhs(n, m=None, seed=0):
@@ -164,46 +180,259 @@ def test_submit_validation():
             BatchServer(max_batch=bad)
 
 
-def test_tick_failure_fails_chunk_and_requeues_rest():
-    """If one chunk's drain raises, its futures carry the error, every
-    not-yet-drained request stays queued for the next tick, and the
-    exception reaches the tick caller — no request is stranded."""
+def test_tick_failure_is_contained_and_typed():
+    """Failure containment (DESIGN.md §10): a failing chunk drain never
+    unwinds ``tick()`` — bisection isolates the poisoned request, which
+    fails with a typed ``DrainError`` carrying the cause, while every
+    other request (in the same chunk AND in later chunks) resolves in the
+    same tick."""
     clear_compile_cache()
-    srv = BatchServer(graph="g2", max_batch=2)
+    srv = BatchServer(graph="g2", max_batch=2, max_retries=0)
+    futs = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(3)]
+    poisoned = futs[0].rid
     boom = RuntimeError("executor down")
-    good = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(2)]
-    later = [srv.lu(dd_matrix(32, seed=9), partitions=((2, 2),))]
-    calls = {"n": 0}
+    with faults.inject(
+        "serve.drain",
+        boom,
+        when=lambda ctx: poisoned in ctx["rids"],
+        times=None,
+    ):
+        rep = srv.tick()  # must NOT raise
+    assert rep.resolved == 2 and rep.failed == 1 and rep.bisected == 1
+    assert srv.pending() == 0
+    err = futs[0].exception()
+    assert isinstance(err, DrainError) and err.__cause__ is boom
+    with pytest.raises(DrainError, match=f"rid={poisoned}"):
+        futs[0].result()
+    for s in (1, 2):  # chunk-mate and later chunk both resolved, correct
+        l, u = futs[s].result()
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u),
+            np.asarray(dd_matrix(32, seed=s)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
 
-    import repro.serve.server as server_mod
 
-    real_dispatcher = server_mod.Dispatcher
+def test_bisect_isolates_poisoned_request_in_large_bucket():
+    """ISSUE acceptance: 16 requests, one deterministically poisoned —
+    the other 15 resolve with correct numerics in the SAME tick via
+    bisection, only the poisoned future fails, and a subsequent healthy
+    repeat tick still replays at 0 compiles / 1 launch."""
+    clear_compile_cache()
+    n, N = 32, 16
+    srv = BatchServer(graph="g2", max_retries=0)
 
-    class FailingFirst(real_dispatcher):
-        def run(self):
-            calls["n"] += 1
-            if calls["n"] == 1:
-                raise boom
-            return super().run()
+    def one_tick(seed0):
+        futs = [
+            srv.lu(dd_matrix(n, seed=seed0 + s), partitions=((2, 2),))
+            for s in range(N)
+        ]
+        return futs, srv.tick()
 
-    server_mod.Dispatcher = FailingFirst
-    try:
-        with pytest.raises(RuntimeError, match="executor down"):
-            srv.tick()
-    finally:
-        server_mod.Dispatcher = real_dispatcher
-    # first chunk failed: its futures re-raise the drain error
-    for f in good:
-        assert f.done
-        with pytest.raises(RuntimeError, match="executor down"):
-            f.result()
-    # the untouched chunk was re-queued and serves on the next tick
-    assert srv.pending() == 1
-    srv.tick()
-    l, u = later[0].result()
+    one_tick(0)  # healthy capture tick: compiles + memoizes the 16-bucket
+    futs, _ = (
+        [srv.lu(dd_matrix(n, seed=100 + s), partitions=((2, 2),)) for s in range(N)],
+        None,
+    )
+    poisoned = futs[3].rid
+    with faults.inject(
+        "serve.drain",
+        RuntimeError("lane poisoned"),
+        when=lambda ctx: poisoned in ctx["rids"],
+        times=None,
+    ):
+        rep = srv.tick()
+    assert rep.resolved == N - 1 and rep.failed == 1, rep
+    assert rep.bisected >= 1 and srv.pending() == 0
+    for s, f in enumerate(futs):
+        if f.rid == poisoned:
+            assert isinstance(f.exception(), DrainError)
+            continue
+        l, u = f.result()
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u),
+            np.asarray(dd_matrix(n, seed=100 + s)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+    # serving loop intact: the next healthy full tick replays from the memo
+    _, rep = one_tick(200)
+    assert rep.compiles == 0 and rep.launches == 1 and rep.stacked_drains == 1
+
+
+def test_check_finite_fails_only_poisoned_lane():
+    """Lane-isolated numerics (DESIGN.md §10): a NaN input poisons its own
+    stacked lane only — with ``check_finite=True`` that one request fails
+    with ``NumericalError`` while its lane-mates resolve correct results
+    from the same drain, without any retry (deterministic error)."""
+    clear_compile_cache()
+    n = 32
+    srv = BatchServer(graph="g2", check_finite=True)
+    mats = [np.asarray(dd_matrix(n, seed=s)) for s in range(4)]
+    mats[2] = mats[2].copy()
+    mats[2][0, 0] = np.nan
+    futs = [srv.lu(jnp.asarray(m), partitions=((2, 2),)) for m in mats]
+    rep = srv.tick()
+    assert rep.resolved == 3 and rep.failed == 1 and rep.retried == 0
+    assert isinstance(futs[2].exception(), NumericalError)
+    for s in (0, 1, 3):
+        l, u = futs[s].result()
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u), mats[s], rtol=2e-4, atol=2e-4
+        )
+
+
+def test_deadline_expires_without_draining():
+    clear_compile_cache()
+    t = [0.0]
+    srv = BatchServer(graph="g2", clock=lambda: t[0])
+    doomed = srv.lu(dd_matrix(32, seed=0), partitions=((2, 2),), deadline=5.0)
+    healthy = srv.lu(dd_matrix(32, seed=1), partitions=((2, 2),))
+    t[0] = 10.0  # past the deadline before any tick
+    rep = srv.tick()
+    assert rep.expired == 1 and rep.resolved == 1
+    assert isinstance(doomed.exception(), DeadlineExceeded)
+    l, u = healthy.result()
     np.testing.assert_allclose(
         np.asarray(l) @ np.asarray(u),
-        np.asarray(dd_matrix(32, seed=9)),
+        np.asarray(dd_matrix(32, seed=1)),
         rtol=2e-4,
         atol=2e-4,
     )
+
+
+def test_admission_reject_policy():
+    srv = BatchServer(graph="g2", max_pending=2, overload_policy="reject")
+    kept = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(2)]
+    shed = srv.lu(dd_matrix(32, seed=9), partitions=((2, 2),))
+    assert shed.done and isinstance(shed.exception(), RejectedError)
+    assert srv.pending() == 2 and srv.stats["shed"] == 1
+    srv.tick()
+    for f in kept:
+        assert f.exception() is None
+
+
+def test_admission_drop_oldest_policy():
+    srv = BatchServer(graph="g2", max_pending=2, overload_policy="drop_oldest")
+    first = srv.lu(dd_matrix(32, seed=0), partitions=((2, 2),))
+    rest = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in (1, 2)]
+    # the NEW request was admitted; the OLDEST queued one was evicted
+    assert isinstance(first.exception(), RejectedError)
+    assert srv.pending() == 2 and srv.stats["shed"] == 1
+    srv.tick()
+    for s, f in zip((1, 2), rest):
+        l, u = f.result()
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u),
+            np.asarray(dd_matrix(32, seed=s)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+def test_retry_budget_with_backoff_then_recovery():
+    """A transient drain failure consumes the retry budget with
+    exponential tick backoff, then the request recovers and resolves."""
+    clear_compile_cache()
+    srv = BatchServer(graph="g2", max_retries=2, retry_backoff=1)
+    f = srv.lu(dd_matrix(32, seed=5), partitions=((2, 2),))
+    with faults.inject("serve.drain", RuntimeError("transient"), times=2):
+        rep1 = srv.tick()  # attempt 1 fails -> eligible next tick
+        assert rep1.retried == 1 and not f.done and srv.pending() == 1
+        rep2 = srv.tick()  # attempt 2 fails -> backoff holds 1 extra tick
+        assert rep2.retried == 1 and not f.done
+        rep3 = srv.tick()  # held back: nothing eligible this tick
+        assert rep3.buckets == 0 and srv.pending() == 1
+    rep4 = srv.tick()  # fault exhausted: drain succeeds
+    assert rep4.resolved == 1
+    l, u = f.result()
+    np.testing.assert_allclose(
+        np.asarray(l) @ np.asarray(u),
+        np.asarray(dd_matrix(32, seed=5)),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_retry_budget_exhaustion_fails_typed():
+    clear_compile_cache()
+    srv = BatchServer(graph="g2", max_retries=1, retry_backoff=1)
+    f = srv.lu(dd_matrix(32, seed=6), partitions=((2, 2),))
+    with faults.inject("serve.drain", RuntimeError("hard down"), times=None):
+        assert srv.tick().retried == 1
+        assert srv.tick().failed == 1
+    err = f.exception()
+    assert isinstance(err, DrainError) and "2 attempt(s)" in str(err)
+
+
+def test_requeue_preserves_fifo_and_carries_retry_count():
+    """Satellite regression: a re-queued request keeps FIFO order within
+    its signature bucket (drains BEFORE anything submitted later) and
+    carries its retry count across ticks."""
+    clear_compile_cache()
+    srv = BatchServer(graph="g2", max_retries=2, retry_backoff=1)
+    r0 = srv.lu(dd_matrix(32, seed=0), partitions=((2, 2),))
+    r1 = srv.lu(dd_matrix(32, seed=1), partitions=((2, 2),))
+    with faults.inject(
+        "serve.drain",
+        RuntimeError("transient"),
+        when=lambda ctx: r1.rid in ctx["rids"],
+        times=2,  # the [r0, r1] chunk, then the bisected [r1] singleton
+    ):
+        srv.tick()
+    assert r0.exception() is None and not r1.done
+    (pend,) = [p for q in srv._queues.values() for p in q]
+    assert pend.future.rid == r1.rid
+    assert pend.attempts == 1 and pend.retries_left == 1  # count carried
+    r2 = srv.lu(dd_matrix(32, seed=2), partitions=((2, 2),))
+    with faults.inject("serve.drain", record=True, times=None) as probe:
+        rep = srv.tick()
+    assert rep.resolved == 2
+    # ONE drain served both, with the re-queued request at the FRONT
+    assert probe.log[0]["rids"] == [r1.rid, r2.rid]
+    for s, f in ((1, r1), (2, r2)):
+        l, u = f.result()
+        np.testing.assert_allclose(
+            np.asarray(l) @ np.asarray(u),
+            np.asarray(dd_matrix(32, seed=s)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+def test_future_ergonomics():
+    """Satellite: the pending error names rid + signature; ``exception()``
+    mirrors concurrent.futures (None on success, the error on failure,
+    pending error before the tick)."""
+    srv = BatchServer(graph="g2")
+    f = srv.lu(dd_matrix(32, seed=1), partitions=((2, 2),))
+    with pytest.raises(RuntimeError, match=f"rid={f.rid}.*getrf"):
+        f.result()
+    with pytest.raises(RuntimeError, match="not drained"):
+        f.exception()
+    srv.tick()
+    assert f.exception() is None
+    f.result()
+    g = srv.lu(dd_matrix(32, seed=2), partitions=((2, 2),))
+    rejected = BatchServer(graph="g2", max_pending=1, overload_policy="reject")
+    rejected.lu(dd_matrix(32, seed=3), partitions=((2, 2),))
+    h = rejected.lu(dd_matrix(32, seed=4), partitions=((2, 2),))
+    assert isinstance(h.exception(), RejectedError)
+    with pytest.raises(RejectedError):
+        h.result()
+    assert not g.done  # unrelated server state never leaks across futures
+
+
+def test_tick_reports_latency_percentiles():
+    clear_compile_cache()
+    t = [0.0]
+    srv = BatchServer(graph="g2", clock=lambda: t[0])
+    for s in range(3):
+        srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),))
+    t[0] = 0.25  # every request queued 250ms before the drain completes
+    rep = srv.tick()
+    assert rep.resolved == 3
+    assert rep.p50_ms >= 250.0 and rep.p99_ms >= rep.p50_ms
+    pct = srv.latency_percentiles()
+    assert pct["samples"] == 3 and pct["p50_ms"] >= 250.0
