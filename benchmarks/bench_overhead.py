@@ -13,6 +13,11 @@ groups == groups_prefusion), plus the composed ``lu_solve`` drain
 reduce the group count, and the fused drain is timed against the same
 pipeline as three barrier-separated drains).
 
+Also measures the static-verification cost pair (DESIGN.md §11): cold
+drains (memo cleared) with/without ``verify``, and hot memo replays where
+the verifier is skipped by construction — CI gates that verify-off drains
+record zero verification counters and verify-on replays stay pure replay.
+
 Emits ``BENCH_overhead.json`` (machine-readable; tracked PR-over-PR).
 ``--smoke`` runs a fast, small-size variant for CI's compile-counter
 regression gate and writes ``BENCH_overhead.smoke.json`` instead.
@@ -97,7 +102,8 @@ def hand_written_blocked_lu(a: jnp.ndarray, p: int) -> jnp.ndarray:
 
 
 def drain_stats(
-    mats, p: int, graph: str = "g2", submit=utp_cholesky
+    mats, p: int, graph: str = "g2", submit=utp_cholesky,
+    verify: bool = False,
 ) -> dict:
     """launches/compiles/fused-group counters for a first and a
     structurally repeated drain; ``mats`` may hold several root matrices
@@ -111,7 +117,7 @@ def drain_stats(
     clear_compile_cache()
     out = {}
     for which in ("first_drain", "repeat_drain"):
-        d = Dispatcher(graph=graph, stack_roots=False)
+        d = Dispatcher(graph=graph, stack_roots=False, verify=verify)
         for a in mats:
             group = a if isinstance(a, tuple) else (a,)
             datas = [
@@ -127,6 +133,13 @@ def drain_stats(
             "groups": int(d.executor.stats.get("groups", 0)),
             "groups_prefusion": int(
                 d.executor.stats.get("groups_prefusion", 0)
+            ),
+            # static-verification counters (DESIGN.md §11): must be zero
+            # with verify off (no added work disabled) and zero on memo
+            # replays (replay pays zero) — both CI-gated
+            "verified_scopes": int(d.stats.get("verified_scopes", 0)),
+            "verified_plans": int(
+                d.executor.stats.get("verified_plans", 0)
             ),
         }
     return out
@@ -246,6 +259,49 @@ def main(smoke: bool = False) -> None:
         lu_solve_three_drains_us=t_three * 1e6,
         lu_solve_fused_drain_us=t_fused_solve * 1e6,
     )
+    # Static-verification cost (DESIGN.md §11): verify-on vs verify-off,
+    # cold (drain memo cleared each call — the full hazard + plan proofs
+    # run against cached compiled programs) and hot (memo replay — the
+    # verifier is skipped entirely by construction).  The counter shapes
+    # are gated in CI; the timings document what REPRO_VERIFY=1 costs.
+    from repro.analysis import clear_verified_cache
+    from repro.core.executors.jit_wave import _DRAIN_MEMO
+
+    def lu_drain(verify: bool, fresh: bool = False):
+        if fresh:
+            _DRAIN_MEMO.clear()
+            clear_verified_cache()
+        d = Dispatcher(graph="g2", stack_roots=False, verify=verify)
+        A = GData(
+            a_lu.shape, partitions=((p, p),), dtype=a_lu.dtype, value=a_lu
+        )
+        utp_getrf(d, A)
+        d.run()
+        return A.value
+
+    t_cold_off, t_cold_on = timeit_pair(
+        lambda: lu_drain(False, fresh=True),
+        lambda: lu_drain(True, fresh=True),
+        warmup=warmup, iters=iters)
+    row("lu_drain_cold_verify_off", t_cold_off)
+    row("lu_drain_cold_verify_on", t_cold_on,
+        f"verify_cost={100*(t_cold_on/t_cold_off-1):+.1f}%")
+    t_hot_off, t_hot_on = timeit_pair(
+        lambda: lu_drain(False), lambda: lu_drain(True),
+        warmup=warmup, iters=iters)
+    row("lu_drain_hot_verify_off", t_hot_off)
+    row("lu_drain_hot_verify_on", t_hot_on,
+        f"replay_cost={100*(t_hot_on/t_hot_off-1):+.1f}%")
+    report.update(
+        verify_stats=drain_stats(a_lu, p, submit=utp_getrf, verify=True),
+        verify_cold_off_us=t_cold_off * 1e6,
+        verify_cold_on_us=t_cold_on * 1e6,
+        verify_cold_ratio=t_cold_on / t_cold_off,
+        verify_hot_off_us=t_hot_off * 1e6,
+        verify_hot_on_us=t_hot_on * 1e6,
+        verify_hot_ratio=t_hot_on / t_hot_off,
+    )
+
     path = SMOKE_JSON_PATH if smoke else JSON_PATH
     with open(path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

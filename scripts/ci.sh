@@ -11,6 +11,19 @@ echo "== tier-1: pytest =="
 # no -x: report every failure; set -e still fails the gate on any red test
 python -m pytest -q
 
+echo "== tier-1 under REPRO_VERIFY=1: every drain hazard-checked + plan-proven =="
+REPRO_VERIFY=1 python -m pytest -q
+
+echo "== gate: operation-algebra linter over the full registry (DESIGN.md §11) =="
+python scripts/lint_ops.py
+
+echo "== gate: ruff check baseline (skipped when ruff is not installed) =="
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src
+else
+  echo "ruff not installed; skipping (config: ruff.toml)"
+fi
+
 echo "== perf smoke: bench_overhead --smoke (writes BENCH_overhead.smoke.json) =="
 python -m benchmarks.bench_overhead --smoke
 
@@ -57,10 +70,36 @@ if not ls["groups"] < ls["groups_prefusion"]:
         f"lu_solve overlap fusion regressed: {ls['groups']} !< "
         f"{ls['groups_prefusion']} prefusion"
     )
+# static verification (DESIGN.md §11): disabled = zero added work on the
+# hot path; enabled = first drain proves, memo replay pays nothing
+for case in ("stats", "lu_stats", "lu_multiroot_stats", "lu_solve_stats"):
+    for which in ("first_drain", "repeat_drain"):
+        s = r[case][which]
+        if s["verified_scopes"] or s["verified_plans"]:
+            fail.append(
+                f"{case}.{which}: verify-off drain did verification work "
+                f"({s['verified_scopes']} scopes, {s['verified_plans']} plans)"
+            )
+vf, vr = r["verify_stats"]["first_drain"], r["verify_stats"]["repeat_drain"]
+if vf["verified_scopes"] < 1 or vf["verified_plans"] < 1:
+    fail.append(
+        f"verify-on first drain did not verify ({vf['verified_scopes']} "
+        f"scopes, {vf['verified_plans']} plans)"
+    )
+if vr["compiles"] != 0 or vr["launches"] != 1:
+    fail.append(
+        f"verify-on repeat drain not pure replay ({vr['compiles']} "
+        f"compiles, {vr['launches']} launches)"
+    )
+if vr["verified_scopes"] or vr["verified_plans"]:
+    fail.append(
+        f"verify-on replay paid verification work ({vr['verified_scopes']} "
+        f"scopes, {vr['verified_plans']} plans)"
+    )
 if fail:
     print("COMPILE/FUSION GATE FAILED:\n  " + "\n  ".join(fail))
     sys.exit(1)
-print("compile-counter + fusion gate OK")
+print("compile-counter + fusion + verification-cost gate OK")
 EOF
 
 echo "== gate: fault injection — every named site recovers (DESIGN.md §10) =="
@@ -129,6 +168,40 @@ for s, f in enumerate(futs):
                     np.asarray(dd_matrix(32, seed=s)), atol=2e-4),
         f"split.value_dependent: fallback numerics wrong (request {s})",
     )
+
+# plan.* mutation sites (DESIGN.md §11): each schedule corruption must be
+# caught by the static verifier with the right invariant name
+from repro.core import Dispatcher, GData
+from repro.errors import ScheduleVerificationError
+from repro.linalg.lu import run_lu_batched, utp_getrf
+
+for site, expect in (
+    ("plan.drop_edge", "hazards"),
+    ("plan.merge_groups", "verify_plan.group_independence"),
+):
+    clear_compile_cache()
+    d = Dispatcher(graph="g2", verify=True)
+    A = GData(a.shape, partitions=((2, 2),), dtype=a.dtype, value=a)
+    utp_getrf(d, A)
+    try:
+        with faults.inject(site):
+            d.run()
+        check(False, f"{site}: schedule corruption not caught")
+    except ScheduleVerificationError as e:
+        check(e.site == expect, f"{site}: wrong invariant {e.site}")
+clear_compile_cache()
+import os
+os.environ["REPRO_VERIFY"] = "1"
+try:
+    with faults.inject("plan.alias_lane"):
+        run_lu_batched(
+            [dd_matrix(32, seed=s) for s in range(4)], partitions=((2, 2),)
+        )
+    check(False, "plan.alias_lane: lane aliasing not caught")
+except ScheduleVerificationError as e:
+    check(e.site == "verify_stacked.lane_alias",
+          f"plan.alias_lane: wrong invariant {e.site}")
+del os.environ["REPRO_VERIFY"]
 
 # serve.drain: bisection isolates the poisoned request, tick never unwinds
 clear_compile_cache()

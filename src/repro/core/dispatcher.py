@@ -14,10 +14,13 @@ leaf executor runs the waves.  This is the AOT realization of the paper's
 
 from __future__ import annotations
 
+import os
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
+from ..analysis.hazards import analyze_hazards
+from ..analysis.verify import verify_stacked_members
 from ..testing import faults
 from .executors.base import Executor
 from .executors.inline import InlineExecutor
@@ -59,10 +62,19 @@ class Dispatcher:
         mesh=None,
         memoize_drains: bool = True,
         stack_roots: bool = True,
+        verify: Optional[bool] = None,
     ):
         self.graph = get_graph(graph) if isinstance(graph, str) else graph
         self.mesh = mesh
+        # Static verification (DESIGN.md §11): when on, every non-replay
+        # scope is hazard-cross-checked and every planned schedule proven
+        # legal before launch.  Default comes from REPRO_VERIFY ("" / "0"
+        # = off) so whole test/bench runs can opt in without code changes.
+        if verify is None:
+            verify = os.environ.get("REPRO_VERIFY", "") not in ("", "0")
+        self.verify = bool(verify)
         self.executor = _make_executor(self.graph, mesh, self._on_finished)
+        self.executor.verify = self.verify
         self.memoize_drains = memoize_drains
         # Homogeneous-root stacking (DESIGN.md §7): a drain whose root
         # stream is N structurally identical, data-disjoint tasks runs as
@@ -80,6 +92,7 @@ class Dispatcher:
             "memo_hits": 0,
             "memo_misses": 0,
             "stacked_drains": 0,
+            "verified_scopes": 0,
         }
 
     # -- paper-facing API ------------------------------------------------------
@@ -221,6 +234,16 @@ class Dispatcher:
         key = None if base_key is None else base_key + (("stacked", bucket),)
         memo = _DRAIN_MEMO.get(key) if key is not None else None
         members = self._stacked_members(roots)
+        if faults.fires("plan.alias_lane", n_lanes=n):
+            # corrupt the lane map BEFORE the memo branch so both the
+            # capture and the replay path see the aliased lanes
+            members = [[ms[0], ms[0], *ms[2:]] for ms in members]
+        if self.verify:
+            # V5 runs on every stacked drain (replays included): lane
+            # membership is per-drain data identity, not plan structure,
+            # so it cannot ride the structural verdict cache — but it is
+            # one O(lanes) set walk, not a re-verification of the plan.
+            verify_stacked_members(members)
         if memo is not None:
             self.stats["memo_hits"] += 1
             self.stats["stacked_drains"] += 1
@@ -382,11 +405,25 @@ class Dispatcher:
             # fuses groups across former wave boundaries (DESIGN.md §2).
             # ``collect`` gathers the leaf schedules instead of executing
             # (the stacked drain path plans them all before running any)
+            dag = tracker.dag()
+            if faults.fires(
+                "plan.drop_edge", level=level, n_tasks=len(tasks)
+            ):
+                faults.mutate_drop_edges(dag)
+            if self.verify:
+                analyze_hazards(tasks, dag)
+                self.stats["verified_scopes"] += 1
             if collect is not None:
-                collect.append((waves, tracker.dag()))
+                collect.append((waves, dag))
             else:
-                self.executor.execute_schedule(waves, tracker.dag())
+                self.executor.execute_schedule(waves, dag)
             return
+        if self.verify:
+            # inner scopes carry dependences too (a wrong inner-level wave
+            # order reorders whole subtree expansions) — cross-check every
+            # scope, not just the leaf one (DESIGN.md §11)
+            analyze_hazards(tasks, tracker.dag())
+            self.stats["verified_scopes"] += 1
         for wave in waves:
             children: List[GTask] = []
 

@@ -45,6 +45,11 @@ class Executor:
     def __init__(self, on_task_finished: Optional[Callable[[GTask], None]] = None):
         self.on_task_finished = on_task_finished
         self.stats = defaultdict(int)
+        # Static verification flag (DESIGN.md §11), set by the owning
+        # Dispatcher.  It lives on the executor — not only on dispatcher
+        # drain paths — so EVERY route into plan_schedule is covered,
+        # including the ``_StackedAbort`` fallback re-drain.
+        self.verify = False
 
     def execute_schedule(self, waves: List[List[GTask]], dag=None) -> int:
         """Run a leaf schedule: the Kahn level waves plus (optionally) the

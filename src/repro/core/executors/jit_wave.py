@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...analysis.verify import verify_plan
 from ...testing import faults
 from ..data import GData, StackedEpoch, from_grid, to_grid
 from ..task import GTask, TaskState
@@ -247,6 +248,12 @@ class JitWaveExecutor(Executor):
             for wave in waves:
                 n += self.execute_wave(wave)
             return n
+        if self.verify and dag is not None:
+            # prove the plan before launching it (DESIGN.md §11); verdicts
+            # cache on (structural key, index digest) so a structurally
+            # repeated drain pays one dict probe here
+            verify_plan(plan, dag)
+            self.stats["verified_plans"] += 1
         return self._run_program(plan)
 
     def execute_waves(self, waves: List[List[GTask]]) -> int:
@@ -278,6 +285,12 @@ class JitWaveExecutor(Executor):
                 d not in members for d in plan.roots_order
             ):
                 return None
+            if self.verify and dag is not None:
+                # all template plans are proven up front, before ANY lane
+                # executes — a verification failure aborts with no partial
+                # state, same contract as the planning fall-off above
+                verify_plan(plan, dag)
+                self.stats["verified_plans"] += 1
             plans.append(plan)
         n = 0
         for plan in plans:

@@ -241,6 +241,33 @@ def _fuse(
     return slots, prefusion
 
 
+def _mutate_merge_dependent_groups(slots: List[List[_Fused]]) -> bool:
+    """``plan.merge_groups`` fault site (DESIGN.md §11): force-merge the
+    first same-signature group pair sitting in DIFFERENT issue slots.
+
+    Such a pair is dependent by construction — the legal fusion pass has
+    already merged every same-signature INDEPENDENT pair — so the merge
+    produces exactly the corrupted shape ``verify_plan`` must reject: one
+    launch containing path-connected tasks (V1), usually with overlapping
+    write blocks as well (V3/V4).  Mutating after slotting (not inside
+    ``_fuse``) keeps the quotient DAG acyclic, so planning itself cannot
+    hang — the bug ships silently unless the verifier catches it.
+    """
+    flat = [
+        (si, f) for si, groups in enumerate(slots) for f in groups
+    ]
+    for i, (si, f1) in enumerate(flat):
+        for sj, f2 in flat[i + 1 :]:
+            if sj > si and f1.compat == f2.compat and faults.fires(
+                "plan.merge_groups", op=f1.op.name, slots=(si, sj)
+            ):
+                for slots_, ts in f2.segments:
+                    f1.merge(slots_, ts, f2.preds)
+                slots[sj].remove(f2)
+                return True
+    return False
+
+
 def plan_schedule(
     waves: Sequence[Sequence[GTask]], dag=None
 ) -> Optional[SchedulePlan]:
@@ -284,6 +311,8 @@ def plan_schedule(
 
     heights = dag.heights() if dag is not None else {}
     fused_slots, prefusion = _fuse(waves, dag, slot_of)
+    if faults.active():
+        _mutate_merge_dependent_groups(fused_slots)
 
     plan_slots: List[List[GroupPlan]] = []
     tasks: List[GTask] = []

@@ -100,6 +100,16 @@ class TaskDag:
             reach_b |= reach[t]
         return not (reach_a & mask_b) and not (reach_b & mask_a)
 
+    def path(self, a: int, b: int) -> bool:
+        """True iff a directed path ``a -> b`` exists (strict: no trivial
+        self-path).  The static verifier's primitive (DESIGN.md §11): the
+        hazard analysis asks it for every recomputed dependence pair, and
+        ``verify_plan`` for every intra-group member pair — both O(1) once
+        the reachability bitsets are built."""
+        if self._reach is None:
+            self._closure()
+        return bool(self._reach[a] & (1 << self._pos[b]))
+
     def heights(self) -> Dict[int, int]:
         """Longest path (in tasks) from each task to a sink — the critical-
         path priority used for lookahead ordering (panel factorizations sit

@@ -13,8 +13,18 @@ concrete type:
     │                     NEVER retried
     ├── DeadlineExceeded  the request's deadline passed before it was
     │                     drained; the request was failed WITHOUT draining
-    └── RejectedError     admission control shed the request (queue at
-                          ``max_pending``) — it was never queued/drained
+    ├── RejectedError     admission control shed the request (queue at
+    │                     ``max_pending``) — it was never queued/drained
+    └── ScheduleVerificationError
+                          the static verifier (DESIGN.md §11) proved a
+                          schedule invariant violated — a race the
+                          versioning missed or an illegal plan; the message
+                          names the site and the offending task pair.
+                          Deterministic (structural), NEVER retried.
+
+``LintError`` (operation-algebra linter, DESIGN.md §11) sits outside the
+``ServeError`` tree: it is raised by static tooling over the Operation
+registry, never by a drain.
 
 The taxonomy lives at the top level (not under ``serve/``) because the
 drain-side surfaces raise it too: ``run_lu(check_finite=True)`` raises
@@ -52,10 +62,47 @@ class RejectedError(ServeError):
     """Admission control rejected the request (overload shedding)."""
 
 
+class ScheduleVerificationError(ServeError):
+    """A schedule invariant failed static verification (DESIGN.md §11).
+
+    Raised by the hazard analysis (a dependence the versioning DAG does not
+    order — a race) or by the plan verifier (an illegal fused group, slot
+    order, scatter overlap, or lane aliasing).  The message carries the
+    verification *site* and the offending task pair / block coordinates so
+    the failure is actionable without re-running.  Deterministic for a
+    given schedule structure, so the serving layer never retries it.
+    """
+
+    def __init__(self, site: str, detail: str, pair: tuple = ()):
+        self.site = site
+        self.pair = tuple(pair)
+        msg = f"[{site}] {detail}"
+        if self.pair:
+            msg += f" (tasks: {', '.join(str(p) for p in self.pair)})"
+        super().__init__(msg)
+
+
+class LintError(Exception):
+    """The operation-algebra linter found contract violations (DESIGN.md
+    §11): an impure ``split`` on a memoizable Operation, access modes
+    inconsistent with the leaf's write positions, or incoherent
+    leaf/batched-leaf signatures.  Static tooling only — never raised by a
+    drain."""
+
+    def __init__(self, issues):
+        self.issues = list(issues)
+        super().__init__(
+            f"{len(self.issues)} operation lint issue(s):\n  "
+            + "\n  ".join(str(i) for i in self.issues)
+        )
+
+
 __all__ = [
     "DeadlineExceeded",
     "DrainError",
+    "LintError",
     "NumericalError",
     "RejectedError",
+    "ScheduleVerificationError",
     "ServeError",
 ]

@@ -45,6 +45,7 @@ from ..errors import (
     DrainError,
     NumericalError,
     RejectedError,
+    ScheduleVerificationError,
     ServeError,
 )
 from ..linalg.lu import _unpack
@@ -53,8 +54,14 @@ from ..testing import faults
 _rid = itertools.count()
 
 #: errors that re-running the same request deterministically reproduces —
-#: failing fast beats burning the retry budget on them
-_NON_RETRYABLE = (NumericalError, DeadlineExceeded, RejectedError)
+#: failing fast beats burning the retry budget on them (a schedule that
+#: fails verification will fail verification identically on every retry)
+_NON_RETRYABLE = (
+    NumericalError,
+    DeadlineExceeded,
+    RejectedError,
+    ScheduleVerificationError,
+)
 
 
 class ServeFuture:

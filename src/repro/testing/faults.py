@@ -33,6 +33,20 @@ Sites (armed by name; arming an unknown name is an error):
                             dispatching (ctx: rids, op, size) — the
                             request-attributable failure bisection hunts
 
+Plan-mutation sites (DESIGN.md §11) — boolean sites whose consuming code
+CORRUPTS the schedule instead of raising, so the static verifier can be
+proven to detect exactly the bug class it claims to:
+
+    plan.drop_edge          the leaf scope's tracker DAG loses every
+                            in-edge of one task (a missed dependence —
+                            the race ``analyze_hazards`` must catch)
+    plan.merge_groups       the fusion pass force-merges two DEPENDENT
+                            same-signature groups into one launch (the
+                            illegal fusion ``verify_plan`` V1 must catch)
+    plan.alias_lane         a stacked drain aliases lane 1 of every root
+                            slot to lane 0's data (the overlap
+                            ``verify_stacked_members`` V5 must catch)
+
 Pure stdlib; importable from production code with near-zero cost when no
 fault is armed (one module-flag check per site call).
 """
@@ -52,6 +66,9 @@ KNOWN_SITES = frozenset(
         "memo.capture",
         "split.value_dependent",
         "serve.drain",
+        "plan.drop_edge",
+        "plan.merge_groups",
+        "plan.alias_lane",
     }
 )
 
@@ -229,6 +246,31 @@ def corrupt(site: str, value, **ctx):
     return value
 
 
+def mutate_drop_edges(dag):
+    """``plan.drop_edge`` mutation: remove EVERY in-edge of the first task
+    (smallest id) that has predecessors, returning ``(task_id, dropped
+    pred ids)`` or None if the DAG is edge-free.
+
+    Dropping all in-edges (not just one) makes detection a guarantee, not
+    an accident of DAG shape: a single dropped edge can be transitively
+    implied by the remaining edges, in which case the schedule is still
+    correct and the verifier rightly stays quiet.  With indegree forced to
+    zero no path can reach the task at all, so each of its former direct
+    predecessors (every one a true conflict — the tracker only records
+    conflicts) becomes an unordered conflicting pair.  Duck-typed over
+    ``TaskDag``; must be applied to a freshly built DAG (before its bitset
+    reachability is computed/cached)."""
+    for tid in sorted(dag.tasks):
+        preds = dag.preds.get(tid)
+        if preds:
+            dropped = sorted(preds)
+            for p in dropped:
+                dag.edges[p].discard(tid)
+            preds.clear()
+            return tid, dropped
+    return None
+
+
 __all__ = [
     "Fault",
     "KNOWN_SITES",
@@ -237,5 +279,6 @@ __all__ = [
     "fire",
     "fires",
     "inject",
+    "mutate_drop_edges",
     "reset",
 ]
