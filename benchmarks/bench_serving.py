@@ -16,12 +16,24 @@ N=1..max sweep (must stay O(log N): one program per pow2 bucket plus the
 N=1 unstacked drain) and the ``BatchServer`` steady state (repeat ticks
 must be 0 compiles / 1 launch per signature bucket).
 
+Async overlap A/B (DESIGN.md §12): the ``overlap`` section serves the same
+multi-bucket request stream through two servers that differ ONLY in the
+``overlap`` flag — off is the pre-PR fence-per-bucket behaviour — with the
+two sides interleaved inside every timing iteration (``timeit_pair``).
+``check_finite=True`` on both sides makes each tick a true fence (the
+validation probes depend on every result grid), so the measured ratio is
+completed-work throughput, not dispatch depth.  Per-tick ``host_idle_us``
+and ``overlap_ratio`` counters land in the JSON alongside the ratio.
+
 Emits ``BENCH_serving.json`` (``--smoke``: smaller sizes, writes
-``BENCH_serving.smoke.json`` for CI's serving gate).  ``--overload`` adds a
-fault-and-overload scenario (DESIGN.md §10): a burst past ``max_pending``
-plus an injected poisoned request, recording p50/p99 latency and the
-shed/retried/failed counters — CI's serving gate checks this section
-alongside the unchanged 0-compile/1-launch repeat-tick contract.
+``BENCH_serving.smoke.json`` for CI's serving gate) and appends one
+summary line per run to the TaPS-style trend file
+``BENCH_serving.trend.jsonl`` so future changes can gate on regressions.
+``--overload`` adds a fault-and-overload scenario (DESIGN.md §10): a burst
+past ``max_pending`` plus an injected poisoned request, recording p50/p99
+latency and the shed/retried/failed counters — CI's serving gate checks
+this section alongside the unchanged 0-compile/1-launch repeat-tick
+contract.
 """
 
 from __future__ import annotations
@@ -29,6 +41,7 @@ from __future__ import annotations
 import json
 import math
 import sys
+import time
 
 import jax
 import numpy as np
@@ -45,6 +58,7 @@ from .common import row, timeit, timeit_pair
 
 JSON_PATH = "BENCH_serving.json"
 SMOKE_JSON_PATH = "BENCH_serving.smoke.json"
+TREND_PATH = "BENCH_serving.trend.jsonl"
 
 
 def _mats(N: int, n: int, seed0: int = 0):
@@ -110,6 +124,84 @@ def _overload_section(smoke: bool) -> dict:
         f"p99={section['latency']['p99_ms']:.1f}ms",
     )
     return section
+
+
+def _overlap_ab_section(smoke: bool) -> dict:
+    """Interleaved A/B of overlap on vs. off (DESIGN.md §12).
+
+    One tick serves one request in each of K signature buckets — the shape
+    where fence-per-bucket hurts most: overlap-off pays (host + device +
+    fence) serially per bucket, overlap-on launches all K programs
+    back-to-back and fences once.  ``check_finite=True`` on BOTH sides so
+    every measured tick ends fully validated (identical semantics, only
+    the fencing strategy differs)."""
+    clear_compile_cache()
+    sizes = tuple(range(24, 56, 8)) if smoke else tuple(range(24, 152, 8))
+    per = 1
+    pools = {
+        n: _mats(per, n, seed0=n) for n in sizes
+    }
+    requests = per * len(sizes)
+
+    def make_round(srv: BatchServer):
+        def fn():
+            for n in sizes:
+                for m in pools[n]:
+                    srv.lu(m, partitions=((4, 4),))
+            return srv.tick()
+
+        return fn
+
+    srv_on = BatchServer(graph="g2", check_finite=True, overlap=True)
+    srv_off = BatchServer(graph="g2", check_finite=True, overlap=False)
+    fn_on, fn_off = make_round(srv_on), make_round(srv_off)
+    fn_on()  # capture tick: compiles + memo capture, shared by both sides
+    fn_off()
+    warmup, iters = (1, 3) if smoke else (2, 13)
+    t_off, t_on = timeit_pair(fn_off, fn_on, warmup=warmup, iters=iters)
+    rep_on, rep_off = fn_on(), fn_off()
+    ratio = t_off / t_on
+    row(
+        "serve_overlap_ab",
+        t_on,
+        f"{requests/t_on:.1f}req/s off={t_off*1e6:.0f}us "
+        f"off/on={ratio:.2f}x idle_on={rep_on.host_idle_us:.0f}us "
+        f"idle_off={rep_off.host_idle_us:.0f}us",
+    )
+    return {
+        "requests": requests,
+        "buckets": len(sizes),
+        "sizes": list(sizes),
+        "on_us": t_on * 1e6,
+        "off_us": t_off * 1e6,
+        "off_over_on": ratio,
+        "on_req_per_s": requests / t_on,
+        "host_idle_us_on": rep_on.host_idle_us,
+        "host_idle_us_off": rep_off.host_idle_us,
+        "overlap_ratio_on": rep_on.overlap_ratio,
+        "overlap_ratio_off": rep_off.overlap_ratio,
+    }
+
+
+def _append_trend(report: dict) -> None:
+    """Append one summary line per run to the TaPS-style trend file —
+    a monotonically growing jsonl so future PRs can gate on regressions
+    against history rather than a single frozen baseline."""
+    line = {
+        "t": time.time(),
+        "bench": "serving",
+        "mode": report["mode"],
+        "backend": report["backend"],
+        "tick_req_per_s": report.get("tick_req_per_s"),
+        "repeat_tick_compiles": report.get("repeat_tick_compiles"),
+        "repeat_tick_host_idle_us": report.get("repeat_tick_host_idle_us"),
+        "overlap_off_over_on": report.get("overlap", {}).get("off_over_on"),
+        "n16_seq_over_stacked": report.get("by_batch", {})
+        .get("16", {})
+        .get("seq_over_stacked"),
+    }
+    with open(TREND_PATH, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
 
 
 def main(smoke: bool = False, overload: bool = False) -> None:
@@ -209,6 +301,9 @@ def main(smoke: bool = False, overload: bool = False) -> None:
     reports = [queue_and_tick(100 * (i + 1)) for i in range(3)]
     repeat_compiles = sum(r.compiles for r in reports)
     repeat_launches = [r.launches for r in reports]
+    # pipeline contract (DESIGN.md §12): without check_finite a repeat tick
+    # never fences, so its host idle must be exactly zero
+    repeat_host_idle = sum(r.host_idle_us for r in reports)
     t_tick = timeit(lambda: queue_and_tick(rng.integers(1 << 20)),
                     warmup=1, iters=(3 if smoke else 7))
     latency = srv.latency_percentiles()
@@ -224,9 +319,12 @@ def main(smoke: bool = False, overload: bool = False) -> None:
         tick_req_per_s=tick_n / t_tick,
         repeat_tick_compiles=repeat_compiles,
         repeat_tick_launches=repeat_launches,
+        repeat_tick_host_idle_us=repeat_host_idle,
         latency=latency,
         server_stats=dict(srv.stats),
     )
+
+    report["overlap"] = _overlap_ab_section(smoke)
 
     if overload:
         report["overload"] = _overload_section(smoke)
@@ -236,6 +334,8 @@ def main(smoke: bool = False, overload: bool = False) -> None:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path}")
+    _append_trend(report)
+    print(f"# appended {TREND_PATH}")
 
 
 if __name__ == "__main__":

@@ -216,6 +216,22 @@ check(rep.resolved == 7 and rep.failed == 1,
 check(isinstance(futs[2].exception(), DrainError),
       "serve.drain: poisoned future lacks DrainError")
 
+# drain.inflight (DESIGN.md §12): a failure surfacing only at the deferred
+# fence of an overlapped tick is contained by synchronous half re-drains;
+# every future ends the tick resolved — none half-resolved
+clear_compile_cache()
+srv = BatchServer(graph="g2", overlap=True, check_finite=True)
+futs = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(4)]
+with faults.inject("drain.inflight", RuntimeError("device lost mid-flight"),
+                   when=lambda ctx: "rids" in ctx, times=1):
+    rep = srv.tick()
+check(rep.bisected >= 1 and rep.resolved == 4 and rep.failed == 0,
+      f"drain.inflight: transient not isolated "
+      f"({rep.resolved} ok, {rep.failed} bad, {rep.bisected} bisects)")
+check(all(f.done for f in futs), "drain.inflight: half-resolved futures")
+for f in futs:
+    check(f.exception() is None, "drain.inflight: healthy request failed")
+
 if fail:
     print("FAULT GATE FAILED:\n  " + "\n  ".join(fail))
     sys.exit(1)
@@ -279,6 +295,38 @@ else:
     olat = ov["latency"]
     if not (olat["samples"] > 0 and olat["p99_ms"] >= olat["p50_ms"] > 0):
         fail.append(f"overload latency percentiles malformed: {olat}")
+# async drain overlap (DESIGN.md §12): a repeat tick without check_finite
+# never fences, so its accumulated host idle must be exactly zero...
+if r["repeat_tick_host_idle_us"] != 0:
+    fail.append(
+        f"repeat ticks blocked the host under overlap "
+        f"({r['repeat_tick_host_idle_us']}us idle)"
+    )
+# ...and the interleaved A/B must show overlap-on no slower than off
+# (0.9 tolerates smoke-mode noise; the full run reports the real win)
+ol = r.get("overlap")
+if ol is None:
+    fail.append("overlap A/B section missing")
+elif ol["off_over_on"] < 0.9:
+    fail.append(
+        f"overlap-on slower than overlap-off beyond noise: "
+        f"{ol['off_over_on']:.2f}x (floor 0.9)"
+    )
+# TaPS-style trend file: append-per-run, last line carries the tracked keys
+import os
+if not os.path.exists("BENCH_serving.trend.jsonl"):
+    fail.append("BENCH_serving.trend.jsonl missing (append-per-run trend)")
+else:
+    lines = open("BENCH_serving.trend.jsonl").read().strip().splitlines()
+    try:
+        t = json.loads(lines[-1])
+        for k in ("t", "bench", "mode", "backend", "tick_req_per_s",
+                  "repeat_tick_compiles", "repeat_tick_host_idle_us",
+                  "overlap_off_over_on", "n16_seq_over_stacked"):
+            if k not in t:
+                fail.append(f"trend line missing key: {k}")
+    except ValueError:
+        fail.append("trend file last line is not valid JSON")
 if fail:
     print("SERVING GATE FAILED:\n  " + "\n  ".join(fail))
     sys.exit(1)
@@ -286,7 +334,8 @@ print(
     f"serving gate OK (sweep {r['sweep_compiles']}/"
     f"{r['sweep_compile_budget']} compiles, N=16 stacked "
     f"{n16['seq_over_stacked']:.2f}x over sequential, "
-    f"{n16['seg_over_stacked']:.2f}x over segment-fused, overload "
+    f"{n16['seg_over_stacked']:.2f}x over segment-fused, overlap A/B "
+    f"{ol['off_over_on']:.2f}x, overload "
     f"{ov['resolved']}/{ov['submitted']} resolved with {ov['shed']} shed)"
 )
 EOF

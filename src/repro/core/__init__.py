@@ -7,20 +7,22 @@ task-flow graph configuration (G1-G4 analogs).
 
 from .api import dispatcher, utp_finalize, utp_get_parameters, utp_initialize
 from .data import GData, GView, Region, dd_matrix, spd_matrix
-from .dispatcher import Dispatcher
+from .dispatcher import Dispatcher, DrainHandle
 from .graph import GRAPHS, TaskFlowGraph, get_graph
 from .operation import Operation, OpRegistry
 from .task import Access, GTask, TaskState
-from .versioning import DepTracker, TaskDag
+from .versioning import DepTracker, InFlightEpoch, TaskDag
 
 __all__ = [
     "Access",
     "DepTracker",
     "Dispatcher",
+    "DrainHandle",
     "GData",
     "GRAPHS",
     "GTask",
     "GView",
+    "InFlightEpoch",
     "Operation",
     "OpRegistry",
     "Region",

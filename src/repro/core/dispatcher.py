@@ -28,7 +28,7 @@ from .executors.jit_wave import _DRAIN_MEMO, JitWaveExecutor, PallasExecutor
 from .executors.sharded import ShardExecutor
 from .graph import TaskFlowGraph, get_graph
 from .task import GTask, TaskState
-from .versioning import DepTracker
+from .versioning import DepTracker, InFlightEpoch
 
 
 def _make_executor(graph: TaskFlowGraph, mesh, on_finished) -> Executor:
@@ -45,6 +45,57 @@ def _make_executor(graph: TaskFlowGraph, mesh, on_finished) -> Executor:
     if graph.leaf_executor == "pallas":
         return PallasExecutor(on_task_finished=on_finished)
     return JitWaveExecutor(on_task_finished=on_finished)
+
+
+class DrainHandle:
+    """Handle over one overlapped (asynchronously launched) drain
+    (DESIGN.md §12).
+
+    ``run_async`` returns it immediately after the drain's programs have
+    been DISPATCHED — device execution continues in the background while
+    the host plans the next drain.  ``wait()`` is the optional fence; it
+    also carries the in-flight extension of the capture-window hardening:
+    a drain that fails AFTER dispatch (device-side error, injected
+    ``drain.inflight`` fault) may have stored drain-memo entries this
+    execution can no longer vouch for, so a failing ``wait`` discards
+    exactly the keys this drain wrote before re-raising — the next healthy
+    occurrence simply re-captures them.
+    """
+
+    def __init__(
+        self,
+        leaves: int,
+        epochs: List[InFlightEpoch],
+        memo_keys: List[tuple],
+    ):
+        self.leaves = leaves
+        self.epochs = epochs
+        self._memo_keys = memo_keys
+
+    def is_ready(self) -> bool:
+        """Non-blocking: True iff every launch has materialized on device."""
+        return all(ep.is_ready() for ep in self.epochs)
+
+    def invalidate_memo(self) -> None:
+        """Discard the drain-memo entries this drain stored (idempotent)."""
+        keys, self._memo_keys = self._memo_keys, []
+        for key in keys:
+            _DRAIN_MEMO.discard(key)
+
+    def wait(self) -> float:
+        """Fence: block until every launch's live outputs materialize;
+        returns host seconds spent blocked.  Epochs are fenced in launch
+        order and donated buffers are skipped (the donation handshake,
+        DESIGN.md §12), so overlapped re-drains over the same data are safe
+        to fence even after their grids were donated forward."""
+        try:
+            faults.fire(
+                "drain.inflight", epochs=len(self.epochs), leaves=self.leaves
+            )
+            return sum(ep.wait() for ep in self.epochs)
+        except BaseException:
+            self.invalidate_memo()
+            raise
 
 
 class _StackedAbort(Exception):
@@ -84,6 +135,9 @@ class Dispatcher:
         self.stack_roots = stack_roots
         self._pending_roots: List[GTask] = []
         self._capture_valid = True
+        # drain-memo keys stored by the CURRENT drain — handed to the
+        # DrainHandle so an in-flight failure can invalidate exactly them
+        self._drain_keys: List[tuple] = []
         self.finished_count = 0
         self.stats: Dict[str, int] = {
             "submitted": 0,
@@ -127,6 +181,7 @@ class Dispatcher:
         # PR-3 path: per-root expansion + cross-root segment fusion.
         roots, self._pending_roots = self._pending_roots, []
         before = self.finished_count
+        self._drain_keys = []
         if self.stack_roots and self._stackable(roots):
             if self._run_stacked(roots):
                 return self.finished_count - before
@@ -164,7 +219,25 @@ class Dispatcher:
                     "split": self.stats["split"] - stats_before[0],
                     "waves": self.stats["waves"] - stats_before[1],
                 }
+                self._drain_keys.append(key)
         return self.finished_count - before
+
+    def run_async(self) -> DrainHandle:
+        """Drain all submitted tasks WITHOUT fencing device execution.
+
+        Identical host-side work to ``run()`` — expansion, versioning,
+        planning, memoization, and program dispatch all happen now — but
+        the compiled programs execute asynchronously: the returned
+        ``DrainHandle`` carries the drain's in-flight epochs so the caller
+        can overlap the next drain's host work with this one's device work
+        and fence later (or never: touching a result's ``.value`` blocks
+        exactly like any lazy jax array).  Synchronous executors return an
+        already-complete handle, so callers need no capability check
+        (DESIGN.md §12)."""
+        leaves = self.run()
+        return DrainHandle(
+            leaves, self.executor.take_inflight(), list(self._drain_keys)
+        )
 
     # -- homogeneous-root stacking (DESIGN.md §7) ------------------------------
     def _stackable(self, roots: List[GTask]) -> bool:
@@ -313,6 +386,7 @@ class Dispatcher:
                     "split": self.stats["split"] - stats_before[0],
                     "waves": self.stats["waves"] - stats_before[1],
                 }
+                self._drain_keys.append(key)
         for t in roots:
             t.state = TaskState.FINISHED
         return True

@@ -41,6 +41,7 @@ from ...analysis.verify import verify_plan
 from ...testing import faults
 from ..data import GData, StackedEpoch, from_grid, to_grid
 from ..task import GTask, TaskState
+from ..versioning import InFlightEpoch
 from .base import Executor, group_wave
 from .wave_program import SchedulePlan, build_program, plan_schedule
 
@@ -71,6 +72,7 @@ class DrainMemo:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
 
     def get(self, key: tuple):
         entry = self._entries.get(key)
@@ -96,6 +98,17 @@ class DrainMemo:
             self._entries.popitem(last=False)
             self.evictions += 1
 
+    def discard(self, key: tuple) -> None:
+        """Drop one entry (no-op if absent) — the in-flight failure
+        hardening hook (DESIGN.md §12): a drain whose program FAILED after
+        dispatch may have captured/refreshed an entry this drain can no
+        longer vouch for, so the dispatcher's ``DrainHandle`` invalidates
+        exactly the keys it stored.  Counted as an invalidation (the entry
+        is simply re-captured on the next healthy occurrence)."""
+        if key in self._entries:
+            del self._entries[key]
+            self.invalidations += 1
+
     def stats(self) -> Dict[str, int]:
         return {
             "entries": len(self._entries),
@@ -103,6 +116,7 @@ class DrainMemo:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "invalidations": self.invalidations,
         }
 
     # dict-compatible surface (tests introspect the memo directly)
@@ -179,6 +193,33 @@ class JitWaveExecutor(Executor):
         self._capture: Optional[List[ProgramRecord]] = None
         self._capture_ids: Dict[int, int] = {}
         self._capture_ok = True
+        # in-flight epoch handles, one per launch since the last take
+        # (DESIGN.md §12); launches are asynchronous, so nothing here blocks
+        self.inflight: List[InFlightEpoch] = []
+
+    # -- async launch tracking (DESIGN.md §12) ---------------------------------
+    def _note_launch(self, outs, label: str) -> None:
+        """Record a dispatched program's outputs as an in-flight epoch.
+
+        Launch order is preserved — the donation handshake relies on it
+        (a donated grid's completion is covered by a LATER epoch in the
+        list).  Already-materialized epochs are pruned opportunistically so
+        a dispatcher reused across many drains without ``take_inflight``
+        (e.g. ``run_lu`` one-shots) cannot accumulate handles."""
+        if len(self.inflight) >= 8:
+            self.inflight = [e for e in self.inflight if not e.is_ready()]
+        self.inflight.append(InFlightEpoch(outs, label))
+
+    def take_inflight(self) -> List[InFlightEpoch]:
+        eps, self.inflight = self.inflight, []
+        return eps
+
+    def sync(self) -> float:
+        """Fence all outstanding launches; accumulates the blocked host
+        seconds into ``stats['host_block_us']``."""
+        blocked = super().sync()
+        self.stats["host_block_us"] += int(blocked * 1e6)
+        return blocked
 
     # -- drain capture/replay protocol (DESIGN.md §2) --------------------------
     def memo_key_extra(self) -> tuple:
@@ -218,6 +259,7 @@ class JitWaveExecutor(Executor):
             outs = faults.corrupt(
                 "executor.output", outs, batch=rec.batch, replay=True
             )
+            self._note_launch(outs, f"replay:stacked{rec.batch}")
             self._adopt_stacked(datas, outs, rec.blocks)
         else:
             grids, _ = self._enter_grids(datas, rec.blocks)
@@ -225,6 +267,7 @@ class JitWaveExecutor(Executor):
             outs = faults.corrupt(
                 "executor.output", outs, batch=None, replay=True
             )
+            self._note_launch(outs, "replay")
             for data, g in zip(datas, outs):
                 data.set_grid(g)
         self.stats["tasks"] += rec.n_tasks
@@ -405,6 +448,9 @@ class JitWaveExecutor(Executor):
         outs = faults.corrupt(
             "executor.output", outs, batch=batch, replay=False
         )
+        self._note_launch(
+            outs, f"stacked{batch}" if batch is not None else "program"
+        )
         if stack is not None:
             self._adopt_stacked(member_lists, outs, plan.blocks)
         else:
@@ -547,6 +593,7 @@ class JitWaveExecutor(Executor):
         )
         roots_in = tuple(data_of[d].value for d in roots_order)
         roots_out = fn(roots_in, idxs)
+        self._note_launch(roots_out, "group")
         for d, arr in zip(roots_order, roots_out):
             data_of[d].value = arr
         for t in tasks:

@@ -51,6 +51,20 @@ stacked drain is different: ``build_program(batch=B)`` pads B to a pow2
 bucket upstream, because B is a jit shape every program specializes on —
 DESIGN.md §7; lanes are whole independent workloads, so padding lanes
 never alias real writes.)
+
+Asynchronous dispatch (DESIGN.md §12): the jitted fn a WaveProgram compiles
+to RETURNS BEFORE the device finishes — JAX dispatch is async, so calling
+``fn(grids, idxs)`` costs host microseconds and the result grids are array
+futures.  Nothing in this module (or downstream of it on the drain path)
+forces materialization: outputs go straight back into grid-resident
+``GData`` epochs, the executor records them as an ``InFlightEpoch``, and
+the next drain's planning/tracing/dispatch proceeds while this program
+executes.  The contract that makes this safe is donation discipline:
+``donate_argnums=(0,)`` means a program CONSUMES its input grids, so the
+only party allowed to hand a possibly-in-flight grid to a new program is
+the executor's stacked grid-reuse fast path, which proves sole ownership
+via the epoch holder count first — XLA then serializes the two programs on
+the donated buffer, no host fence required.
 """
 
 from __future__ import annotations
@@ -389,6 +403,11 @@ def build_program(
     A group's reads are legal against the current grids even mid-slot: any
     block a group reads and a slot-mate writes would be a RAW/WAR edge,
     and edges force different slots.
+
+    The returned fn dispatches asynchronously (module docstring /
+    DESIGN.md §12): callers must treat its outputs as in-flight until a
+    fence of their choosing, and must not re-donate an input grid they do
+    not solely own.
     """
     dtypes = tuple(plan.datas[d].dtype for d in plan.roots_order)
 

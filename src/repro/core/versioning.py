@@ -20,8 +20,9 @@ no path connects them — ``TaskDag.independent``; DESIGN.md §2).
 
 from __future__ import annotations
 
+import time
 from collections import defaultdict
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .data import Region
 from .task import GTask
@@ -227,3 +228,62 @@ class DepTracker:
     def sequential_order(self) -> List[GTask]:
         """Program (submission) order — the reference semantics."""
         return [self.tasks[tid] for tid in sorted(self.tasks)]
+
+
+class InFlightEpoch:
+    """One launched program's not-yet-materialized device results
+    (DESIGN.md §12).
+
+    JAX dispatch is asynchronous: a compiled WaveProgram launch returns
+    array futures immediately while XLA executes in the background, so the
+    host is free to plan/trace/dispatch the NEXT drain.  ``InFlightEpoch``
+    is the handle the executor records per launch so callers that need a
+    fence (deferred ``check_finite`` resolution, fault-containment
+    boundaries, benchmarks) can block *once*, at a point of their choosing,
+    instead of the runtime fencing on the critical path.
+
+    Donation-safety handshake: the stacked repeat-tick fast path
+    (DESIGN.md §7) donates epoch N's result grid straight into epoch N+1's
+    program while N may still be in flight.  XLA orders the transfer on
+    device; host-side the donated ``jax.Array`` is invalidated, and calling
+    ``block_until_ready`` on it raises.  Both ``is_ready`` and ``wait``
+    therefore SKIP deleted buffers — a donated output's completion is
+    subsumed by the consuming epoch's, which the caller fences separately
+    (drains hand their epochs forward in launch order, so fencing the
+    newest epoch transitively covers every donated ancestor).
+    """
+
+    __slots__ = ("outputs", "label")
+
+    def __init__(self, outputs: Sequence[object], label: str = ""):
+        self.outputs = tuple(outputs)
+        self.label = label
+
+    @staticmethod
+    def _deleted(arr) -> bool:
+        is_deleted = getattr(arr, "is_deleted", None)
+        return bool(is_deleted()) if is_deleted is not None else False
+
+    def is_ready(self) -> bool:
+        """Non-blocking: True iff every live (non-donated) output has
+        materialized on device."""
+        for arr in self.outputs:
+            if self._deleted(arr):
+                continue
+            is_ready = getattr(arr, "is_ready", None)
+            if is_ready is not None and not is_ready():
+                return False
+        return True
+
+    def wait(self) -> float:
+        """Block until every live output materializes; returns the seconds
+        the host spent blocked (the pipeline's ``host_idle`` contribution).
+        Device-side execution errors surface here, not at launch."""
+        t0 = time.perf_counter()
+        for arr in self.outputs:
+            if self._deleted(arr):
+                continue
+            block = getattr(arr, "block_until_ready", None)
+            if block is not None:
+                block()
+        return time.perf_counter() - t0

@@ -8,6 +8,11 @@ concrete type:
     ServeError
     ├── DrainError        a dispatcher drain raised (compile/launch/capture
     │                     failure); ``__cause__`` carries the original
+    │   └── InflightError the drain dispatched but FAILED before its
+    │                     in-flight results materialized (overlapped
+    │                     execution, DESIGN.md §12) — detected at the
+    │                     deferred resolution fence; retryable like any
+    │                     DrainError
     ├── NumericalError    a drain completed but produced non-finite values
     │                     (singular pivot, overflow) — deterministic, so
     │                     NEVER retried
@@ -43,6 +48,18 @@ class DrainError(ServeError):
 
     Transient by assumption (executor hiccup, injected fault): the serving
     layer retries these within the request's retry budget.
+    """
+
+
+class InflightError(DrainError):
+    """An overlapped drain failed AFTER dispatch, at deferred resolution.
+
+    Under async drain overlap (DESIGN.md §12) a program launch returns
+    before device execution completes; a failure surfacing at the deferred
+    fence (end-of-tick validation, a touched future, an injected
+    ``drain.inflight`` fault) lands here.  The drain's memo entries were
+    already invalidated by the handle.  A ``DrainError`` subclass: transient
+    by assumption, retried within the request's budget.
     """
 
 
@@ -100,6 +117,7 @@ class LintError(Exception):
 __all__ = [
     "DeadlineExceeded",
     "DrainError",
+    "InflightError",
     "LintError",
     "NumericalError",
     "RejectedError",

@@ -21,6 +21,7 @@ drain rather than a decode step.
 from ..errors import (
     DeadlineExceeded,
     DrainError,
+    InflightError,
     NumericalError,
     RejectedError,
     ServeError,
@@ -31,6 +32,7 @@ __all__ = [
     "BatchServer",
     "DeadlineExceeded",
     "DrainError",
+    "InflightError",
     "NumericalError",
     "RejectedError",
     "ServeError",

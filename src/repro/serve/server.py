@@ -23,6 +23,17 @@ deadlines (expired requests fail with ``DeadlineExceeded`` WITHOUT being
 drained), and ``max_pending`` bounds the queue with explicit overload
 shedding (``RejectedError``; reject-new or drop-oldest policy).
 
+Async drain overlap (DESIGN.md §12): with ``overlap=True`` (the default)
+``tick()`` is a pipeline — every bucket's stacked program is LAUNCHED
+back-to-back with no device fence in between (JAX dispatch is
+asynchronous), ``check_finite`` reduces are dispatched eagerly per epoch
+but materialized only in a deferred validation pass at end-of-tick, and an
+in-flight failure (a program that dispatched but failed before its results
+materialized) is contained exactly like a synchronous one: memo
+invalidation via the drain handle, pristine-input rebuild, bisect
+isolation, typed ``InflightError`` with the normal retry budget.
+``overlap=False`` pins the fence-per-bucket behaviour (the A/B baseline).
+
 The generic surface is ``submit(op_name, arrays, ...)`` for any registered
 Operation; ``lu``, ``lu_solve``, and ``cholesky`` are typed conveniences
 that attach the right partitions and result extraction.
@@ -32,6 +43,7 @@ from __future__ import annotations
 
 import itertools
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -39,10 +51,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import Dispatcher, GData, GTask
+from ..core.dispatcher import DrainHandle
 from ..core.operation import OpRegistry
 from ..errors import (
     DeadlineExceeded,
     DrainError,
+    InflightError,
     NumericalError,
     RejectedError,
     ScheduleVerificationError,
@@ -169,6 +183,22 @@ class TickReport:
     pending_after: int = 0
     p50_ms: float = 0.0
     p99_ms: float = 0.0
+    # pipeline accounting (DESIGN.md §12)
+    host_idle_us: float = 0.0  # host time blocked on device results
+    overlap_ratio: float = 1.0  # 1 - host_idle / tick wall time
+
+
+@dataclass
+class _Launched:
+    """One dispatched-but-unresolved chunk in the tick pipeline
+    (DESIGN.md §12): its programs are in flight, its ``check_finite``
+    probes (if any) are dispatched, nothing has been materialized."""
+
+    sig: tuple
+    chunk: List[_Pending]
+    dispatcher: Dispatcher
+    handle: DrainHandle
+    probes: Optional[List[list]]  # per member: [(device probe, lane|None)]
 
 
 class BatchServer:
@@ -188,6 +218,14 @@ class BatchServer:
     attempts.  ``check_finite=True`` validates result lanes after every
     drain (NumericalError on the poisoned lanes only).  ``clock`` is
     injectable for deterministic deadline tests.
+
+    ``overlap=True`` (default) pipelines the tick (DESIGN.md §12): all
+    bucket programs launch back-to-back and validation is deferred to
+    end-of-tick, so the device is never idle between buckets;
+    ``overlap=False`` fences each bucket before launching the next — bit-
+    identical results, the interleaved-A/B baseline.  ``latency_window``
+    bounds the rolling latency history (a ring buffer, so a long-running
+    server's percentile cost stays O(window), not O(lifetime)).
     """
 
     def __init__(
@@ -200,6 +238,8 @@ class BatchServer:
         max_retries: int = 1,
         retry_backoff: int = 1,
         check_finite: bool = False,
+        overlap: bool = True,
+        latency_window: int = 4096,
         clock: Callable[[], float] = time.monotonic,
     ):
         if max_batch < 1 or max_batch & (max_batch - 1):
@@ -217,6 +257,10 @@ class BatchServer:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         if retry_backoff < 1:
             raise ValueError(f"retry_backoff must be >= 1, got {retry_backoff}")
+        if latency_window < 1:
+            raise ValueError(
+                f"latency_window must be >= 1, got {latency_window}"
+            )
         self.graph = graph
         self.mesh = mesh
         self.max_batch = max_batch
@@ -225,11 +269,14 @@ class BatchServer:
         self.max_retries = max_retries
         self.retry_backoff = retry_backoff
         self.check_finite = check_finite
+        self.overlap = bool(overlap)
         self._clock = clock
         self._queues: Dict[tuple, List[_Pending]] = {}
-        # rolling window of resolved-request latencies (ms) for p50/p99
-        self._latencies: List[float] = []
-        self._latency_window = 4096
+        # rolling window of resolved-request latencies (ms) for p50/p99 —
+        # a bounded ring buffer, NOT an unbounded list (a long-running
+        # server would otherwise leak one float per resolved request)
+        self._latencies: deque = deque(maxlen=latency_window)
+        self._tick_lat: List[float] = []  # this tick's resolved latencies
         self.stats: Dict[str, int] = {
             "requests": 0,
             "ticks": 0,
@@ -245,6 +292,7 @@ class BatchServer:
             "retried": 0,
             "shed": 0,
             "bisected": 0,
+            "host_idle_us": 0,
         }
 
     # -- request surface -------------------------------------------------------
@@ -414,6 +462,14 @@ class BatchServer:
         """Drain every eligible queued request: one stacked drain per
         signature bucket (chunked at ``max_batch``), resolve the futures.
 
+        Pipelined (DESIGN.md §12): launch-all-buckets, deferred-validate,
+        resolve.  With ``overlap`` on, every chunk's program (and its
+        eagerly dispatched ``check_finite`` probes) is launched before ANY
+        result is materialized; the single deferred-validation pass at the
+        end of the tick is the only point the host may block, and only
+        when ``check_finite`` needs the probe values.  With ``overlap``
+        off each chunk is finalized (fenced) before the next launches.
+
         Failure containment (DESIGN.md §10): the serving loop never
         unwinds.  Deadline-expired requests fail with ``DeadlineExceeded``
         without draining; a chunk whose drain raises is bisected to
@@ -421,11 +477,15 @@ class BatchServer:
         isolated transient failures consume the request's retry budget and
         re-queue IN FIFO ORDER with exponential tick backoff, carrying
         their retry count; exhausted or deterministic failures land on the
-        future as a typed ``ServeError``."""
+        future as a typed ``ServeError``.  In-flight failures (overlap on,
+        after dispatch) follow the same path with ``InflightError`` and
+        drain-memo invalidation — identical semantics, deferred detection."""
         tick_no = self.stats["ticks"]
         self.stats["ticks"] += 1
+        t_tick = time.perf_counter()
         now = self._clock()
         report = TickReport()
+        self._tick_lat = []
         queues, self._queues = self._queues, {}
         held: Dict[tuple, List[_Pending]] = {}
         ready: Dict[tuple, List[_Pending]] = {}
@@ -447,12 +507,20 @@ class BatchServer:
                     ready.setdefault(sig, []).append(p)
         report.buckets = len(ready)
         retried: Dict[tuple, List[_Pending]] = {}
+        # phase 1 — launch: every chunk's program dispatches back-to-back;
+        # with overlap on, no device fence separates the launches
+        launched: Optional[List[_Launched]] = [] if self.overlap else None
         for sig, pend in ready.items():
             for lo in range(0, len(pend), self.max_batch):
-                self._serve_chunk(
+                self._launch_chunk(
                     sig, pend[lo : lo + self.max_batch], report, retried,
-                    tick_no,
+                    tick_no, launched,
                 )
+        # phase 2/3 — deferred-validate + resolve (end-of-tick): the only
+        # point this tick may block on the device, and only for probes
+        if launched:
+            for item in launched:
+                self._finalize_chunk(item, report, retried, tick_no)
         # re-queue held + retried requests at the FRONT of their buckets,
         # merged by rid (== global FIFO submission order): they are older
         # than anything submitted after this tick
@@ -463,6 +531,11 @@ class BatchServer:
             )
             self._queues[sig] = front + self._queues.get(sig, [])
         report.pending_after = self.pending()
+        wall = time.perf_counter() - t_tick
+        if wall > 0:
+            report.overlap_ratio = max(
+                0.0, 1.0 - report.host_idle_us / (wall * 1e6)
+            )
         for k in (
             "drains",
             "launches",
@@ -477,19 +550,26 @@ class BatchServer:
             "bisected",
         ):
             self.stats[k] += getattr(report, k)
+        self.stats["host_idle_us"] += int(report.host_idle_us)
         return report
 
-    # -- chunk serving with lane isolation (DESIGN.md §10) ---------------------
-    def _serve_chunk(
+    # -- chunk serving with lane isolation (DESIGN.md §10, §12) ----------------
+    def _launch_chunk(
         self,
         sig: tuple,
         chunk: List[_Pending],
         report: TickReport,
         retried: Dict[tuple, List[_Pending]],
         tick_no: int,
+        launched: Optional[List[_Launched]],
     ) -> None:
+        """Dispatch one chunk's drain (and its deferred-validation probes).
+
+        With ``launched`` a list (overlap on) the chunk joins the tick
+        pipeline and is finalized at end-of-tick; with ``launched=None``
+        it is finalized — fenced and resolved — immediately."""
         try:
-            d = self._drain_chunk(chunk)
+            d, handle = self._drain_chunk(chunk)
         except Exception as e:  # noqa: BLE001 — typed at the future boundary
             if len(chunk) == 1:
                 self._fail_or_retry(sig, chunk[0], e, report, retried, tick_no)
@@ -499,10 +579,73 @@ class BatchServer:
             # re-drains, not C singleton drains
             report.bisected += 1
             mid = len(chunk) // 2
-            self._serve_chunk(sig, chunk[:mid], report, retried, tick_no)
-            self._serve_chunk(sig, chunk[mid:], report, retried, tick_no)
+            self._launch_chunk(
+                sig, chunk[:mid], report, retried, tick_no, launched
+            )
+            self._launch_chunk(
+                sig, chunk[mid:], report, retried, tick_no, launched
+            )
             return
-        bad = self._nonfinite_members(chunk) if self.check_finite else ()
+        probes = (
+            self._dispatch_finite_probes(chunk) if self.check_finite else None
+        )
+        item = _Launched(sig, chunk, d, handle, probes)
+        if launched is not None:
+            launched.append(item)
+        else:
+            self._finalize_chunk(item, report, retried, tick_no)
+
+    def _finalize_chunk(
+        self,
+        item: _Launched,
+        report: TickReport,
+        retried: Dict[tuple, List[_Pending]],
+        tick_no: int,
+    ) -> None:
+        """Deferred-validate and resolve one launched chunk.
+
+        The ONLY blocking step of a tick: materializing the ``check_finite``
+        probe values (skipped entirely when validation is off — resolution
+        is then fence-free and results stay lazy on their futures).  A
+        failure here is an IN-FLIGHT failure (DESIGN.md §12): the programs
+        were dispatched, so every member's data is suspect — the drain
+        handle's memo entries are invalidated, members rebuild from their
+        pristine inputs, and isolation proceeds by synchronous
+        (immediately finalized) half re-drains, typed ``InflightError`` at
+        the single-request leaf."""
+        chunk = item.chunk
+        try:
+            faults.fire(
+                "drain.inflight",
+                rids=[p.future.rid for p in chunk],
+                op=chunk[0].op.name,
+                size=len(chunk),
+                pending=not item.handle.is_ready(),
+            )
+            bad = (
+                self._materialize_probes(item.probes, report)
+                if item.probes is not None
+                else ()
+            )
+        except Exception as e:  # noqa: BLE001 — typed at the future boundary
+            item.handle.invalidate_memo()
+            if len(chunk) == 1:
+                self._fail_or_retry(
+                    item.sig, chunk[0], e, report, retried, tick_no,
+                    wrap=InflightError,
+                )
+                return
+            report.bisected += 1
+            for p in chunk:
+                p.rebuild_datas()
+            mid = len(chunk) // 2
+            self._launch_chunk(
+                item.sig, chunk[:mid], report, retried, tick_no, None
+            )
+            self._launch_chunk(
+                item.sig, chunk[mid:], report, retried, tick_no, None
+            )
+            return
         now = self._clock()
         for i, p in enumerate(chunk):
             if i in bad:
@@ -520,9 +663,10 @@ class BatchServer:
             report.resolved += 1
             report.requests += 1
             self._record_latency(report, (now - p.enqueue_t) * 1e3)
+        d = item.dispatcher
         est = d.executor.stats
         bucket_stats = {
-            "signature": sig[1],
+            "signature": item.sig[1],
             "requests": len(chunk),
             "launches": int(est.get("launches", 0)),
             "compiles": int(est.get("compiles", 0)),
@@ -538,7 +682,9 @@ class BatchServer:
         report.memo_hits += bucket_stats["memo_hits"]
         report.memo_misses += bucket_stats["memo_misses"]
 
-    def _drain_chunk(self, chunk: List[_Pending]) -> Dispatcher:
+    def _drain_chunk(
+        self, chunk: List[_Pending]
+    ) -> Tuple[Dispatcher, DrainHandle]:
         faults.fire(
             "serve.drain",
             rids=[p.future.rid for p in chunk],
@@ -550,39 +696,63 @@ class BatchServer:
             d.submit_task(
                 GTask(p.op, None, [dd.root_view() for dd in p.datas])
             )
-        d.run()
-        return d
+        return d, d.run_async()
 
-    def _nonfinite_members(self, chunk: List[_Pending]) -> set:
-        """Indices of chunk members with any non-finite result datum.
+    def _dispatch_finite_probes(self, chunk: List[_Pending]) -> List[list]:
+        """Dispatch (without blocking) the chunk's finiteness reduces.
 
         Lane-isolated and cheap: members of a stacked drain share one
         ``StackedEpoch``, so finiteness is ONE fused all-reduce over the
         ``(B, nr, nc, br, bc)`` epoch grid yielding a per-lane mask —
-        nothing is de-gridded, healthy lanes stay lazily extracted."""
-        epoch_masks: Dict[int, np.ndarray] = {}
-        bad = set()
-        for i, p in enumerate(chunk):
+        nothing is de-gridded, healthy lanes stay lazily extracted.  The
+        reduces are dispatched IMMEDIATELY after the chunk's own launch
+        (before any later drain could donate this epoch's grid forward,
+        DESIGN.md §12) but materialized only at the deferred-validation
+        fence in ``_finalize_chunk``."""
+        epoch_probes: Dict[int, jnp.ndarray] = {}
+        probes: List[list] = []
+        for p in chunk:
+            member = []
             for dd in p.datas:
                 lane = dd.lane
                 if lane is not None:
                     ep, li = lane
-                    mask = epoch_masks.get(id(ep))
-                    if mask is None:
-                        mask = np.asarray(
-                            jnp.isfinite(ep.grid).all(axis=(1, 2, 3, 4))
-                        )
-                        epoch_masks[id(ep)] = mask
-                    ok = bool(mask[li])
+                    probe = epoch_probes.get(id(ep))
+                    if probe is None:
+                        probe = jnp.isfinite(ep.grid).all(axis=(1, 2, 3, 4))
+                        epoch_probes[id(ep)] = probe
+                    member.append((probe, li))
                 elif dd.in_grid_epoch:
-                    ok = bool(jnp.isfinite(dd.grid).all())
+                    member.append((jnp.isfinite(dd.grid).all(), None))
                 elif dd.has_value:
-                    ok = bool(jnp.isfinite(dd.value).all())
-                else:
-                    ok = True
+                    member.append((jnp.isfinite(dd.value).all(), None))
+            probes.append(member)
+        return probes
+
+    def _materialize_probes(
+        self, probes: List[list], report: TickReport
+    ) -> set:
+        """Block on the deferred finiteness probes; returns the indices of
+        chunk members with any non-finite result datum.  The blocked time
+        is the tick's ``host_idle_us`` contribution — with overlap on it is
+        paid ONCE, after every bucket has launched, instead of between
+        buckets.  Device-side execution failures surface here (the probes
+        depend on the program outputs), which is exactly the in-flight
+        failure path of ``_finalize_chunk``."""
+        t0 = time.perf_counter()
+        host: Dict[int, np.ndarray] = {}
+        bad = set()
+        for i, member in enumerate(probes):
+            for probe, li in member:
+                arr = host.get(id(probe))
+                if arr is None:
+                    arr = np.asarray(probe)
+                    host[id(probe)] = arr
+                ok = bool(arr[li]) if li is not None else bool(arr)
                 if not ok:
                     bad.add(i)
                     break
+        report.host_idle_us += (time.perf_counter() - t0) * 1e6
         return bad
 
     def _fail_or_retry(
@@ -593,8 +763,13 @@ class BatchServer:
         report: TickReport,
         retried: Dict[tuple, List[_Pending]],
         tick_no: int,
+        wrap: type = DrainError,
     ) -> None:
-        """One isolated failing request: consume retry budget or fail typed."""
+        """One isolated failing request: consume retry budget or fail typed.
+
+        ``wrap`` types the terminal error for non-``ServeError`` causes:
+        ``DrainError`` for synchronous drain failures, ``InflightError``
+        when the failure surfaced at deferred (in-flight) resolution."""
         if not isinstance(e, _NON_RETRYABLE) and p.retries_left > 0:
             p.retries_left -= 1
             p.attempts += 1
@@ -606,7 +781,7 @@ class BatchServer:
         if isinstance(e, ServeError):
             err = e
         else:
-            err = DrainError(
+            err = wrap(
                 f"request rid={p.future.rid} ({p.op.name}) drain failed "
                 f"after {p.attempts + 1} attempt(s): {e}"
             )
@@ -628,13 +803,13 @@ class BatchServer:
             report.failed += 1
 
     def _record_latency(self, report: TickReport, ms: float) -> None:
+        # the rolling window is a maxlen deque: appends evict the oldest
+        # sample in O(1), so a long-running server never accumulates
         self._latencies.append(ms)
-        if len(self._latencies) > self._latency_window:
-            del self._latencies[: -self._latency_window]
-        # per-tick percentiles over THIS tick's resolved set (cheap: the
-        # slice is the tail appended above)
-        tail = self._latencies[-report.resolved :] if report.resolved else []
-        if tail:
-            arr = np.asarray(tail)
-            report.p50_ms = float(np.percentile(arr, 50))
-            report.p99_ms = float(np.percentile(arr, 99))
+        # per-tick percentiles over THIS tick's resolved set, tracked
+        # separately (the rolling window may already have evicted part of
+        # a large tick's own samples)
+        self._tick_lat.append(ms)
+        arr = np.asarray(self._tick_lat)
+        report.p50_ms = float(np.percentile(arr, 50))
+        report.p99_ms = float(np.percentile(arr, 99))

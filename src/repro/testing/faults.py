@@ -32,6 +32,14 @@ Sites (armed by name; arming an unknown name is an error):
     serve.drain             a ``BatchServer`` chunk drain raises before
                             dispatching (ctx: rids, op, size) — the
                             request-attributable failure bisection hunts
+    drain.inflight          an overlapped drain fails while its epoch is
+                            still in flight (DESIGN.md §12): fired at the
+                            deferred resolution fence — ``DrainHandle.
+                            wait()`` (ctx: epochs, leaves) and the serving
+                            finalize step (ctx: rids, op, size, pending) —
+                            after the program was dispatched, exercising
+                            memo invalidation and the no-half-resolved-
+                            futures invariant
 
 Plan-mutation sites (DESIGN.md §11) — boolean sites whose consuming code
 CORRUPTS the schedule instead of raising, so the static verifier can be
@@ -66,6 +74,7 @@ KNOWN_SITES = frozenset(
         "memo.capture",
         "split.value_dependent",
         "serve.drain",
+        "drain.inflight",
         "plan.drop_edge",
         "plan.merge_groups",
         "plan.alias_lane",

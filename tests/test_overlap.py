@@ -1,0 +1,286 @@
+"""Async drain overlap (DESIGN.md §12).
+
+Covers: the ``run_async``/``DrainHandle`` surface, bit-identical results
+with overlap on vs. off across graphs and stacked batch sizes, the
+donation-safety handshake with two in-flight epochs over the same data
+handles, deferred ``check_finite`` validation, the ``drain.inflight``
+fault site (chunk bisect recovery, poisoned-request isolation with a typed
+``InflightError``, drain-memo invalidation on in-flight failure — no
+half-resolved futures in any of them), the tick pipeline counters
+(``host_idle_us``/``overlap_ratio``), REPRO_VERIFY=1 under overlap, and
+the bounded latency window.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Dispatcher, DrainHandle, GData, dd_matrix
+from repro.core.executors import clear_compile_cache
+from repro.core.executors.jit_wave import drain_memo_stats
+from repro.errors import DrainError, InflightError, NumericalError
+from repro.linalg import run_lu
+from repro.linalg.lu import utp_getrf
+from repro.serve import BatchServer
+from repro.testing import faults
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_faults():
+    yield
+    faults.reset()
+
+
+def _mats(n, count, seed0=0):
+    return [dd_matrix(n, seed=seed0 + s) for s in range(count)]
+
+
+# -- run_async surface ---------------------------------------------------------
+def test_run_async_matches_run():
+    a = dd_matrix(64, seed=3)
+    d1 = Dispatcher(graph="g2")
+    A1 = GData((64, 64), partitions=((4, 4),), value=a)
+    utp_getrf(d1, A1)
+    leaves_sync = d1.run()
+
+    d2 = Dispatcher(graph="g2")
+    A2 = GData((64, 64), partitions=((4, 4),), value=a)
+    utp_getrf(d2, A2)
+    handle = d2.run_async()
+    assert isinstance(handle, DrainHandle)
+    assert handle.leaves == leaves_sync
+    blocked = handle.wait()
+    assert blocked >= 0.0 and handle.is_ready()
+    assert handle.wait() >= 0.0  # idempotent fence
+    np.testing.assert_array_equal(np.asarray(A1.value), np.asarray(A2.value))
+
+
+def test_run_async_on_inline_executor_is_complete():
+    # synchronous executors return an already-complete handle — callers
+    # need no capability check (DESIGN.md §12)
+    d = Dispatcher(graph="g1")
+    A = GData((32, 32), partitions=((4, 4),), value=dd_matrix(32, seed=1))
+    utp_getrf(d, A)
+    handle = d.run_async()
+    assert handle.is_ready() and handle.wait() == 0.0
+
+
+# -- bit-identical overlap on vs. off -----------------------------------------
+@pytest.mark.parametrize("graph", ["g1", "g2"])
+@pytest.mark.parametrize("n_req", [1, 4, 16])
+def test_overlap_on_off_bit_identical(graph, n_req):
+    mats = _mats(32, n_req, seed0=7)
+    results = {}
+    for overlap in (False, True):
+        srv = BatchServer(graph=graph, check_finite=True, overlap=overlap)
+        futs = [srv.lu(m) for m in mats]
+        rep = srv.tick()
+        assert rep.resolved == n_req and rep.failed == 0
+        results[overlap] = [f.result() for f in futs]
+    for (l_off, u_off), (l_on, u_on) in zip(results[False], results[True]):
+        np.testing.assert_array_equal(np.asarray(l_off), np.asarray(l_on))
+        np.testing.assert_array_equal(np.asarray(u_off), np.asarray(u_on))
+
+
+def test_overlap_multi_bucket_matches_reference():
+    # several signature buckets launch back-to-back with no fences between
+    # them; results must stay BIT-identical to the fenced (overlap-off)
+    # server — same compiled programs, only the fencing differs — and
+    # numerically close to the single-request reference
+    srv_on = BatchServer(graph="g2", overlap=True)
+    srv_off = BatchServer(graph="g2", overlap=False)
+    futs_on, futs_off, refs = [], [], []
+    for i, n in enumerate((32, 48, 64)):
+        for s in range(3):
+            a = dd_matrix(n, seed=10 * i + s)
+            futs_on.append(srv_on.lu(a))
+            futs_off.append(srv_off.lu(a))
+            refs.append(run_lu(a, partitions=((4, 4),)))
+    rep = srv_on.tick()
+    srv_off.tick()
+    assert rep.buckets == 3 and rep.resolved == 9
+    for f_on, f_off, (l_ref, u_ref) in zip(futs_on, futs_off, refs):
+        l, u = f_on.result()
+        l2, u2 = f_off.result()
+        np.testing.assert_array_equal(np.asarray(l), np.asarray(l2))
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(u2))
+        np.testing.assert_allclose(
+            np.asarray(l), np.asarray(l_ref), atol=1e-5, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(u), np.asarray(u_ref), atol=1e-5, rtol=1e-5
+        )
+
+
+# -- donation-safety handshake -------------------------------------------------
+def test_donation_safety_two_inflight_epochs():
+    """Two overlapped drains over the SAME data handles: the second drain's
+    grid-reuse fast path donates the first epoch's grid while the first may
+    still be in flight.  Fencing either handle must not raise (deleted
+    buffers are skipped — their completion is subsumed by the consuming
+    epoch), and the numerics must match a fully fenced run."""
+    n, count = 32, 4
+    mats = _mats(n, count, seed0=21)
+
+    # reference: same double-factorization, fenced between drains
+    ref_datas = [
+        GData((n, n), partitions=((4, 4),), value=m) for m in mats
+    ]
+    for _ in range(2):
+        d = Dispatcher(graph="g2")
+        for A in ref_datas:
+            utp_getrf(d, A)
+        h = d.run_async()
+        h.wait()
+    refs = [np.asarray(A.value) for A in ref_datas]
+
+    datas = [GData((n, n), partitions=((4, 4),), value=m) for m in mats]
+    d1 = Dispatcher(graph="g2")
+    for A in datas:
+        utp_getrf(d1, A)
+    h1 = d1.run_async()
+    epoch1 = datas[0].lane[0]
+    assert all(
+        A.lane is not None and A.lane[0] is epoch1 for A in datas
+    ), "stacked drain should leave all members lane-resident in one epoch"
+
+    d2 = Dispatcher(graph="g2")
+    for A in datas:
+        utp_getrf(d2, A)
+    h2 = d2.run_async()
+    # the repeat-drain fast path must have donated epoch 1's grid into
+    # drain 2's program — that is the hazard this handshake exists for
+    assert epoch1.grid.is_deleted()
+    assert h1.wait() >= 0.0  # must skip the donated buffer, not raise
+    assert h2.wait() >= 0.0
+    for A, ref in zip(datas, refs):
+        np.testing.assert_array_equal(np.asarray(A.value), ref)
+
+
+# -- deferred validation -------------------------------------------------------
+def test_deferred_check_finite_isolates_poisoned_lane():
+    srv = BatchServer(graph="g2", check_finite=True, overlap=True)
+    mats = _mats(32, 4, seed0=31)
+    poisoned = np.array(mats[2])
+    poisoned[5, 5] = np.nan
+    mats[2] = jnp.asarray(poisoned)
+    futs = [srv.lu(m) for m in mats]
+    rep = srv.tick()
+    assert rep.resolved == 3 and rep.failed == 1
+    assert rep.host_idle_us > 0.0  # the deferred fence actually blocked
+    err = futs[2].exception()
+    assert isinstance(err, NumericalError)
+    for i in (0, 1, 3):
+        assert futs[i].exception() is None
+        futs[i].result()
+
+
+def test_overlap_counters_fence_free_without_check_finite():
+    srv = BatchServer(graph="g2", overlap=True)
+    for m in _mats(32, 4, seed0=41):
+        srv.lu(m)
+    rep = srv.tick()
+    assert rep.resolved == 4
+    assert rep.host_idle_us == 0.0 and rep.overlap_ratio == 1.0
+    assert srv.stats["host_idle_us"] == 0
+
+
+# -- drain.inflight fault site -------------------------------------------------
+def test_inflight_fault_bisects_and_recovers():
+    srv = BatchServer(graph="g2", overlap=True, check_finite=True)
+    futs = [srv.lu(m) for m in _mats(32, 4, seed0=51)]
+    with faults.inject(
+        "drain.inflight",
+        RuntimeError("device lost mid-flight"),
+        when=lambda ctx: "rids" in ctx,  # the serving fence, not wait()
+        times=1,
+    ) as fault:
+        rep = srv.tick()
+    assert fault.fired == 1
+    # the transient in-flight failure was isolated by synchronous half
+    # re-drains; every request still resolved in this tick
+    assert rep.bisected >= 1 and rep.resolved == 4 and rep.failed == 0
+    for f in futs:
+        assert f.done and f.exception() is None
+        f.result()
+
+
+def test_inflight_poisoned_request_fails_typed_and_others_resolve():
+    srv = BatchServer(graph="g2", overlap=True, max_retries=1)
+    futs = [srv.lu(m) for m in _mats(32, 4, seed0=61)]
+    target = futs[1].rid
+    with faults.inject(
+        "drain.inflight",
+        RuntimeError("device lost mid-flight"),
+        when=lambda ctx: target in ctx.get("rids", ()),
+        times=None,
+    ):
+        for _ in range(8):
+            srv.tick()
+            if all(f.done for f in futs):
+                break
+    # no half-resolved futures: every future is done, exactly one failed
+    assert all(f.done for f in futs)
+    err = futs[1].exception()
+    assert isinstance(err, InflightError) and isinstance(err, DrainError)
+    assert "attempt" in str(err)
+    for i in (0, 2, 3):
+        assert futs[i].exception() is None
+        futs[i].result()
+    assert srv.stats["retried"] >= 1  # the retry budget was consumed first
+
+
+def test_inflight_failure_invalidates_drain_memo():
+    clear_compile_cache()
+    a = dd_matrix(32, seed=71)
+    d = Dispatcher(graph="g2")
+    A = GData((32, 32), partitions=((4, 4),), value=a)
+    utp_getrf(d, A)
+    handle = d.run_async()
+    before = drain_memo_stats()
+    assert before["entries"] == 1  # this drain captured its memo entry
+    with faults.inject("drain.inflight", RuntimeError("mid-flight")):
+        with pytest.raises(RuntimeError):
+            handle.wait()
+    after = drain_memo_stats()
+    assert after["entries"] == 0
+    assert after["invalidations"] == before["invalidations"] + 1
+    # the next healthy occurrence simply re-captures
+    d2 = Dispatcher(graph="g2")
+    A2 = GData((32, 32), partitions=((4, 4),), value=a)
+    utp_getrf(d2, A2)
+    d2.run_async().wait()
+    assert drain_memo_stats()["entries"] == 1
+
+
+# -- REPRO_VERIFY under overlap ------------------------------------------------
+def test_verify_green_under_overlap(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    srv = BatchServer(graph="g2", overlap=True, check_finite=True)
+    futs = [srv.lu(m) for m in _mats(32, 4, seed0=81)]
+    rep = srv.tick()
+    assert rep.resolved == 4 and rep.failed == 0
+    for f in futs:
+        l, u = f.result()
+        assert np.isfinite(np.asarray(l)).all()
+
+
+# -- bounded latency window ----------------------------------------------------
+def test_latency_window_is_bounded():
+    srv = BatchServer(graph="g2", latency_window=8)
+    futs = [srv.lu(m) for m in _mats(32, 12, seed0=91)]
+    rep = srv.tick()
+    assert rep.resolved == 12
+    assert srv._latencies.maxlen == 8 and len(srv._latencies) == 8
+    pct = srv.latency_percentiles()
+    assert pct["samples"] == 8 and pct["p50_ms"] >= 0.0
+    # per-tick percentiles still cover the whole tick's resolved set
+    assert rep.p50_ms >= 0.0 and rep.p99_ms >= rep.p50_ms
+    for f in futs:
+        f.result()
+
+
+def test_latency_window_validation():
+    with pytest.raises(ValueError):
+        BatchServer(latency_window=0)
