@@ -22,13 +22,25 @@ from repro.linalg import run_cholesky
 from .common import chol_flops, row, timeit
 
 
-def main(quick: bool = True) -> None:
+GRAPHS = ("g1", "g2", "g2p")
+
+
+def measure(quick: bool = True) -> dict:
+    """Run the config-sweep measurement; returns the raw report dict
+    (seconds + GF/s per (graph, n) plus ``*_max`` aliases for the largest
+    size, which are the mode-independent keys the harness gates on;
+    DESIGN.md §13)."""
     sizes = [(256, 4), (512, 8)] if quick else [(512, 8), (1024, 8), (2048, 16)]
+    report = {"bench": "cholesky", "backend": jax.default_backend(),
+              "sizes": sizes, "by_config": {}}
     for n, p in sizes:
         a = spd_matrix(n)
         t = timeit(lambda: jnp.linalg.cholesky(a))
         row(f"cholesky_direct_n{n}", t, f"{chol_flops(n)/t/1e9:.2f}GF/s")
-        for graph in ("g1", "g2", "g2p"):
+        report["by_config"][f"direct_n{n}"] = {
+            "s": t, "gf": chol_flops(n) / t / 1e9,
+        }
+        for graph in GRAPHS:
             parts = ((p, p),)
             t = timeit(lambda g=graph: run_cholesky(a, graph=g, partitions=parts),
                        warmup=1, iters=2)
@@ -37,6 +49,25 @@ def main(quick: bool = True) -> None:
                 t,
                 f"{chol_flops(n)/t/1e9:.2f}GF/s",
             )
+            report["by_config"][f"{graph}_n{n}_p{p}"] = {
+                "s": t, "gf": chol_flops(n) / t / 1e9,
+            }
+    n, p = sizes[-1]
+    report["n_max"], report["p_max"] = n, p
+    report["direct_gf_max"] = report["by_config"][f"direct_n{n}"]["gf"]
+    for graph in GRAPHS:
+        report[f"{graph}_gf_max"] = (
+            report["by_config"][f"{graph}_n{n}_p{p}"]["gf"]
+        )
+    report["g2_over_direct_time_ratio"] = (
+        report["by_config"][f"g2_n{n}_p{p}"]["s"]
+        / report["by_config"][f"direct_n{n}"]["s"]
+    )
+    return report
+
+
+def main(quick: bool = True) -> None:
+    measure(quick=quick)
 
 
 if __name__ == "__main__":

@@ -18,7 +18,9 @@ from repro.train import UTPTrainStep
 from .common import row, timeit
 
 
-def main(quick: bool = True) -> None:
+def measure(quick: bool = True) -> dict:
+    """Run the LM-side measurement; returns the raw report dict (the
+    harness scenario's ``evaluate`` hook reuses this; DESIGN.md §13)."""
     cfg = ARCHS["qwen3-32b"].reduced()
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
@@ -56,6 +58,23 @@ def main(quick: bool = True) -> None:
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.out_tokens) for r in done)
     row("lm_serve_batched", dt / max(n_tok, 1), f"{n_tok}tok_total")
+    return {
+        "bench": "lm",
+        "backend": jax.default_backend(),
+        "batch": B,
+        "seq": S,
+        "train_step_direct_us": t * 1e6,
+        "train_tok_per_s": B * S / t,
+        "train_step_utp_fused_us": t2 * 1e6,
+        "utp_over_direct_ratio": t2 / t,
+        "serve_tokens": n_tok,
+        "serve_us_per_token": dt / max(n_tok, 1) * 1e6,
+        "serve_tok_per_s": n_tok / dt if dt > 0 else 0.0,
+    }
+
+
+def main(quick: bool = True) -> None:
+    measure(quick=quick)
 
 
 if __name__ == "__main__":

@@ -145,7 +145,10 @@ def drain_stats(
     return out
 
 
-def main(smoke: bool = False) -> None:
+def measure(smoke: bool = False) -> dict:
+    """Run the full overhead measurement; writes the per-bench JSON
+    artifact and returns the raw report dict (the harness scenario's
+    ``evaluate`` hook reuses this directly; DESIGN.md §13)."""
     report = {"bench": "overhead", "backend": jax.default_backend(),
               "mode": "smoke" if smoke else "full"}
     n, p = (256, 8) if smoke else (512, 8)
@@ -307,6 +310,12 @@ def main(smoke: bool = False) -> None:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path} (ratio={ratio:.3f}x)")
+    return report
+
+
+def main(smoke: bool = False, quick: bool = None) -> None:
+    """Standalone entry (``quick`` kept for benchmarks.run compat)."""
+    measure(smoke=smoke if quick is None else quick)
 
 
 if __name__ == "__main__":

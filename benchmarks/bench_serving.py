@@ -26,9 +26,12 @@ completed-work throughput, not dispatch depth.  Per-tick ``host_idle_us``
 and ``overlap_ratio`` counters land in the JSON alongside the ratio.
 
 Emits ``BENCH_serving.json`` (``--smoke``: smaller sizes, writes
-``BENCH_serving.smoke.json`` for CI's serving gate) and appends one
-summary line per run to the TaPS-style trend file
-``BENCH_serving.trend.jsonl`` so future changes can gate on regressions.
+``BENCH_serving.smoke.json`` for CI's serving gate).  Longitudinal
+tracking moved to the evaluation harness (DESIGN.md §13): running this
+bench through ``python -m benchmarks.harness`` appends one unified
+record per run to ``BENCH_trend.jsonl`` and diffs it against the
+recorded baseline (``BENCH_serving.trend.jsonl`` is the frozen pre-§13
+trend history).
 ``--overload`` adds a fault-and-overload scenario (DESIGN.md §10): a burst
 past ``max_pending`` plus an injected poisoned request, recording p50/p99
 latency and the shed/retried/failed counters — CI's serving gate checks
@@ -41,7 +44,6 @@ from __future__ import annotations
 import json
 import math
 import sys
-import time
 
 import jax
 import numpy as np
@@ -58,7 +60,6 @@ from .common import row, timeit, timeit_pair
 
 JSON_PATH = "BENCH_serving.json"
 SMOKE_JSON_PATH = "BENCH_serving.smoke.json"
-TREND_PATH = "BENCH_serving.trend.jsonl"
 
 
 def _mats(N: int, n: int, seed0: int = 0):
@@ -183,28 +184,10 @@ def _overlap_ab_section(smoke: bool) -> dict:
     }
 
 
-def _append_trend(report: dict) -> None:
-    """Append one summary line per run to the TaPS-style trend file —
-    a monotonically growing jsonl so future PRs can gate on regressions
-    against history rather than a single frozen baseline."""
-    line = {
-        "t": time.time(),
-        "bench": "serving",
-        "mode": report["mode"],
-        "backend": report["backend"],
-        "tick_req_per_s": report.get("tick_req_per_s"),
-        "repeat_tick_compiles": report.get("repeat_tick_compiles"),
-        "repeat_tick_host_idle_us": report.get("repeat_tick_host_idle_us"),
-        "overlap_off_over_on": report.get("overlap", {}).get("off_over_on"),
-        "n16_seq_over_stacked": report.get("by_batch", {})
-        .get("16", {})
-        .get("seq_over_stacked"),
-    }
-    with open(TREND_PATH, "a") as f:
-        f.write(json.dumps(line, sort_keys=True) + "\n")
-
-
-def main(smoke: bool = False, overload: bool = False) -> None:
+def measure(smoke: bool = False, overload: bool = False) -> dict:
+    """Run the full serving measurement; writes the per-bench JSON
+    artifact and returns the raw report dict (the harness scenario's
+    ``evaluate`` hook reuses this directly; DESIGN.md §13)."""
     n, p = (64, 4) if smoke else (128, 4)
     sweep_max = 16 if smoke else 64
     batch_sizes = (1, 4, 16) if smoke else (1, 4, 16, 64)
@@ -334,8 +317,11 @@ def main(smoke: bool = False, overload: bool = False) -> None:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path}")
-    _append_trend(report)
-    print(f"# appended {TREND_PATH}")
+    return report
+
+
+def main(smoke: bool = False, overload: bool = False) -> None:
+    measure(smoke=smoke, overload=overload)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,68 @@
+"""TaPS-style evaluation harness (DESIGN.md §13).
+
+A declarative scenario registry over the repo's benchmarks: every
+scenario runs config -> generate -> evaluate -> report and produces ONE
+unified ``Result`` record (backend, workload, graphs, mode, metrics,
+counters) appended to the longitudinal trend file ``BENCH_trend.jsonl``.
+A committed ``BENCH_baseline.json`` holds per-scenario reference metrics
+with tolerance bands; ``python -m benchmarks.harness check`` diffs a run
+(fresh or recorded) against it and exits nonzero on regression:
+
+    python -m benchmarks.harness list                 # registered scenarios
+    python -m benchmarks.harness run   --mode smoke   # run + append trend
+    python -m benchmarks.harness check --mode smoke   # run + gate (CI)
+    python -m benchmarks.harness rebaseline --mode smoke
+
+Gating policy (the machine-checked perf contract):
+  * invariant gates — exact comparisons on counters (e.g.
+    ``repeat_tick_compiles == 0``); no baseline involved,
+  * ratio gates — fixed thresholds on dimensionless ratios (e.g.
+    ``n16_seq_over_stacked >= 1.0``); interleaved A/B ratios are robust
+    to machine drift so they gate exactly,
+  * walltime gates — compared against the recorded baseline within a
+    configurable tolerance band (default ±25%, ``--band``), because CI
+    boxes vary; improvements beyond the band pass and are reported.
+"""
+
+from .baseline import (
+    BASELINE_PATH,
+    BaselineError,
+    Finding,
+    MissingBaselineError,
+    MissingScenarioError,
+    check_result,
+    load_baseline,
+    save_baseline,
+    summarize,
+)
+from .record import (
+    SCHEMA_VERSION,
+    TREND_PATH,
+    Result,
+    append_trend,
+    read_trend,
+    validate_line,
+)
+from .scenario import REGISTRY, Gate, Scenario, register
+
+__all__ = [
+    "BASELINE_PATH",
+    "BaselineError",
+    "Finding",
+    "Gate",
+    "MissingBaselineError",
+    "MissingScenarioError",
+    "REGISTRY",
+    "Result",
+    "SCHEMA_VERSION",
+    "Scenario",
+    "TREND_PATH",
+    "append_trend",
+    "check_result",
+    "load_baseline",
+    "read_trend",
+    "register",
+    "save_baseline",
+    "summarize",
+    "validate_line",
+]

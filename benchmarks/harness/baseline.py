@@ -1,0 +1,255 @@
+"""Baseline recording + regression diffing (DESIGN.md §13).
+
+``BENCH_baseline.json`` is the committed per-scenario reference: for each
+(scenario, mode) it stores the metrics and counters of a recorded run.
+``check_result`` diffs a fresh (or recorded) ``Result`` against it under
+the scenario's declared gates and returns ``Finding``s; any finding with
+``is_failure`` set fails the check.  Rebaselining is an explicit,
+reviewed act: ``python -m benchmarks.harness rebaseline`` rewrites the
+file from a fresh full run and the diff lands in the PR.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .record import Result
+from .scenario import Gate
+
+BASELINE_PATH = "BENCH_baseline.json"
+BASELINE_SCHEMA = 1
+DEFAULT_BAND = 0.25
+
+# finding statuses that fail a check
+_FAILING = (
+    "regression",
+    "invariant_violated",
+    "missing_metric",
+    "missing_baseline",
+)
+
+
+class BaselineError(Exception):
+    """Base for baseline-handling failures."""
+
+
+class MissingBaselineError(BaselineError):
+    """No baseline file — record one with ``harness rebaseline``."""
+
+
+class MissingScenarioError(BaselineError):
+    """The baseline has no entry for this (scenario, mode)."""
+
+
+@dataclass
+class Finding:
+    """One gate evaluation: what was compared, what happened."""
+
+    scenario: str
+    metric: str
+    kind: str  # gate kind, or "schema"
+    status: str  # ok | improvement | regression | invariant_violated
+    #              | missing_metric | missing_baseline | new_metric
+    current: Optional[float] = None
+    reference: Optional[float] = None
+    band: Optional[float] = None
+    detail: str = ""
+
+    @property
+    def is_failure(self) -> bool:
+        return self.status in _FAILING
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "scenario": self.scenario,
+            "metric": self.metric,
+            "kind": self.kind,
+            "status": self.status,
+            "current": self.current,
+            "reference": self.reference,
+            "band": self.band,
+            "detail": self.detail,
+        }
+
+
+def load_baseline(path: str = BASELINE_PATH) -> Dict[str, Any]:
+    if not os.path.exists(path):
+        raise MissingBaselineError(
+            f"{path} not found — record one with "
+            f"`python -m benchmarks.harness rebaseline`"
+        )
+    with open(path) as f:
+        base = json.load(f)
+    if base.get("schema") != BASELINE_SCHEMA:
+        raise BaselineError(
+            f"{path}: schema {base.get('schema')} != {BASELINE_SCHEMA}"
+        )
+    return base
+
+
+def save_baseline(
+    results: Sequence[Result],
+    path: str = BASELINE_PATH,
+    band_default: float = DEFAULT_BAND,
+) -> Dict[str, Any]:
+    """Write (or merge into) the baseline file.
+
+    Existing (scenario, mode) entries not re-recorded in ``results`` are
+    preserved, so ``rebaseline --mode smoke`` does not wipe the full-mode
+    references."""
+    try:
+        base = load_baseline(path)
+    except BaselineError:
+        base = {"schema": BASELINE_SCHEMA, "scenarios": {}}
+    base["band_default"] = band_default
+    base["recorded_t"] = time.time()
+    for r in results:
+        entry = base["scenarios"].setdefault(r.scenario, {})
+        entry[r.mode] = {
+            "backend": r.backend,
+            "t": r.t,
+            "metrics": {k: float(v) for k, v in r.metrics.items()},
+            "counters": {k: int(v) for k, v in r.counters.items()},
+        }
+    with open(path, "w") as f:
+        json.dump(base, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return base
+
+
+def _baseline_entry(
+    base: Dict[str, Any], scenario: str, mode: str
+) -> Dict[str, Any]:
+    scenarios = base.get("scenarios", {})
+    if scenario not in scenarios:
+        raise MissingScenarioError(
+            f"baseline has no scenario {scenario!r} — rebaseline to add it"
+        )
+    if mode not in scenarios[scenario]:
+        raise MissingScenarioError(
+            f"baseline scenario {scenario!r} has no {mode!r} record — "
+            f"rebaseline --mode {mode} to add it"
+        )
+    return scenarios[scenario][mode]
+
+
+def _cmp(op: str, a: float, b: float) -> bool:
+    if op == "==":
+        return a == b
+    if op == "<=":
+        return a <= b
+    return a >= b  # ">="
+
+
+def check_result(
+    result: Result,
+    baseline: Dict[str, Any],
+    gates: Sequence[Gate],
+    default_band: float = None,
+) -> List[Finding]:
+    """Evaluate every gate of one scenario result; returns all findings
+    (passing gates included, status "ok"/"improvement"), so the report
+    artifact documents what was checked, not only what failed."""
+    findings: List[Finding] = []
+    name = result.scenario
+    if default_band is None:
+        default_band = baseline.get("band_default", DEFAULT_BAND)
+
+    entry = None
+    if any(g.kind == "walltime" for g in gates):
+        try:
+            entry = _baseline_entry(baseline, name, result.mode)
+        except MissingScenarioError as e:
+            findings.append(
+                Finding(name, "*", "walltime", "missing_baseline", detail=str(e))
+            )
+
+    for g in gates:
+        section = result.counters if g.kind == "invariant" else result.metrics
+        if g.metric not in section:
+            findings.append(
+                Finding(
+                    name, g.metric, g.kind, "missing_metric",
+                    detail=f"run did not record {g.source()}.{g.metric}",
+                )
+            )
+            continue
+        cur = float(section[g.metric])
+
+        if g.kind in ("invariant", "ratio"):
+            ok = _cmp(g.op, cur, float(g.value))
+            findings.append(
+                Finding(
+                    name, g.metric, g.kind,
+                    "ok" if ok else (
+                        "invariant_violated" if g.kind == "invariant"
+                        else "regression"
+                    ),
+                    current=cur, reference=float(g.value),
+                    detail=f"{g.metric} {cur:g} {g.op} {g.value:g}"
+                    + ("" if ok else " VIOLATED"),
+                )
+            )
+            continue
+
+        # walltime: band comparison against the recorded baseline
+        if entry is None:
+            continue  # missing_baseline already recorded once
+        ref = entry.get("metrics", {}).get(g.metric)
+        if ref is None:
+            findings.append(
+                Finding(
+                    name, g.metric, g.kind, "missing_baseline",
+                    current=cur,
+                    detail=f"baseline entry lacks metrics.{g.metric}",
+                )
+            )
+            continue
+        ref = float(ref)
+        band = g.band if g.band is not None else default_band
+        lo, hi = ref * (1.0 - band), ref * (1.0 + band)
+        if g.higher_is_better:
+            status = (
+                "regression" if cur < lo
+                else "improvement" if cur > hi
+                else "ok"
+            )
+        else:
+            status = (
+                "regression" if cur > hi
+                else "improvement" if cur < lo
+                else "ok"
+            )
+        arrow = "higher" if g.higher_is_better else "lower"
+        findings.append(
+            Finding(
+                name, g.metric, g.kind, status,
+                current=cur, reference=ref, band=band,
+                detail=(
+                    f"{g.metric} {cur:g} vs baseline {ref:g} "
+                    f"(band ±{band:.0%}, {arrow} is better)"
+                ),
+            )
+        )
+    return findings
+
+
+def summarize(findings: Sequence[Finding]) -> Tuple[bool, str]:
+    """(ok, human summary) over all findings of a check."""
+    fails = [f for f in findings if f.is_failure]
+    improvements = [f for f in findings if f.status == "improvement"]
+    lines = []
+    for f in fails:
+        lines.append(f"FAIL  {f.scenario}.{f.metric}: {f.status} — {f.detail}")
+    for f in improvements:
+        lines.append(f"  ++  {f.scenario}.{f.metric}: {f.detail}")
+    n_ok = sum(1 for f in findings if f.status == "ok")
+    lines.append(
+        f"{len(findings)} gates: {n_ok} ok, {len(improvements)} improved, "
+        f"{len(fails)} failed"
+    )
+    return (not fails), "\n".join(lines)

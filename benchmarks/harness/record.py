@@ -1,0 +1,161 @@
+"""Unified benchmark result record + the longitudinal trend file.
+
+Every scenario run produces one ``Result``; serialized as a single JSON
+line it is appended to ``BENCH_trend.jsonl`` — the append-only,
+machine-readable perf trajectory of the repo (TaPS-style; DESIGN.md §13).
+``validate_line`` is the schema contract CI gates on: a bench that stops
+emitting a tracked key fails loudly instead of silently dropping out of
+the trend.
+"""
+
+from __future__ import annotations
+
+import json
+import numbers
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+TREND_PATH = "BENCH_trend.jsonl"
+
+# every trend line must carry exactly these top-level keys
+REQUIRED_KEYS = (
+    "schema",
+    "t",
+    "scenario",
+    "workload",
+    "backend",
+    "mode",
+    "graphs",
+    "metrics",
+    "counters",
+)
+
+
+@dataclass
+class Result:
+    """One scenario run: identity + numeric metrics + exact counters.
+
+    ``metrics`` hold measured quantities (times, throughputs, ratios —
+    floats, band- or threshold-gated); ``counters`` hold exact integers
+    (compile/launch/group counts, derived 0/1 invariant witnesses —
+    gated with exact comparisons).
+    """
+
+    scenario: str
+    workload: str
+    mode: str  # "smoke" | "full"
+    backend: str
+    graphs: Sequence[str]
+    metrics: Dict[str, float]
+    counters: Dict[str, int]
+    t: Optional[float] = None
+    schema: int = SCHEMA_VERSION
+    extra: Dict[str, Any] = field(default_factory=dict)  # not gated, kept
+
+    def __post_init__(self):
+        if self.t is None:
+            self.t = time.time()
+
+    def to_line(self) -> Dict[str, Any]:
+        d = {
+            "schema": self.schema,
+            "t": self.t,
+            "scenario": self.scenario,
+            "workload": self.workload,
+            "backend": self.backend,
+            "mode": self.mode,
+            "graphs": list(self.graphs),
+            "metrics": {k: float(v) for k, v in self.metrics.items()},
+            "counters": {k: int(v) for k, v in self.counters.items()},
+        }
+        if self.extra:
+            d["extra"] = self.extra
+        return d
+
+    @classmethod
+    def from_line(cls, d: Dict[str, Any]) -> "Result":
+        errors = validate_line(d)
+        if errors:
+            raise ValueError(
+                "invalid trend record: " + "; ".join(errors)
+            )
+        return cls(
+            scenario=d["scenario"],
+            workload=d["workload"],
+            mode=d["mode"],
+            backend=d["backend"],
+            graphs=list(d["graphs"]),
+            metrics=dict(d["metrics"]),
+            counters=dict(d["counters"]),
+            t=d["t"],
+            schema=d["schema"],
+            extra=dict(d.get("extra", {})),
+        )
+
+
+def validate_line(d: Any) -> List[str]:
+    """Schema-check one trend record; returns a list of problems (empty
+    means valid).  Kept as data-in/problems-out so both the CI gate and
+    the unit tests drive it directly."""
+    if not isinstance(d, dict):
+        return [f"record is {type(d).__name__}, not an object"]
+    problems = [f"missing key: {k}" for k in REQUIRED_KEYS if k not in d]
+    if problems:
+        return problems
+    if d["schema"] != SCHEMA_VERSION:
+        problems.append(
+            f"schema {d['schema']} != supported {SCHEMA_VERSION}"
+        )
+    for k in ("scenario", "workload", "backend", "mode"):
+        if not isinstance(d[k], str) or not d[k]:
+            problems.append(f"{k} must be a non-empty string")
+    if d.get("mode") not in ("smoke", "full", None) and isinstance(
+        d.get("mode"), str
+    ):
+        pass  # free-form modes allowed; smoke/full are the conventional two
+    if not isinstance(d["graphs"], (list, tuple)):
+        problems.append("graphs must be a list")
+    if not isinstance(d["t"], numbers.Real):
+        problems.append("t must be a number")
+    for section, want_int in (("metrics", False), ("counters", True)):
+        sec = d[section]
+        if not isinstance(sec, dict):
+            problems.append(f"{section} must be an object")
+            continue
+        for k, v in sec.items():
+            if not isinstance(v, numbers.Real) or isinstance(v, bool):
+                problems.append(f"{section}.{k} is not numeric: {v!r}")
+            elif want_int and int(v) != v:
+                problems.append(f"counters.{k} is not an integer: {v!r}")
+    return problems
+
+
+def append_trend(result: Result, path: str = TREND_PATH) -> Dict[str, Any]:
+    """Append one schema-valid line; returns the written record."""
+    line = result.to_line()
+    problems = validate_line(line)
+    if problems:
+        raise ValueError(
+            f"refusing to append invalid trend line: {'; '.join(problems)}"
+        )
+    with open(path, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+    return line
+
+
+def read_trend(path: str = TREND_PATH) -> List[Result]:
+    """Parse a trend file into ``Result`` records (raises on bad lines)."""
+    out = []
+    with open(path) as f:
+        for ln, raw in enumerate(f, 1):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                d = json.loads(raw)
+            except ValueError as e:
+                raise ValueError(f"{path}:{ln}: not JSON: {e}") from None
+            out.append(Result.from_line(d))
+    return out

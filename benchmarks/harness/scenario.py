@@ -1,0 +1,113 @@
+"""Scenario contract + registry (DESIGN.md §13).
+
+A ``Scenario`` is one benchmark case expressed as the TaPS-style hook
+pipeline ``config -> generate -> evaluate -> report``:
+
+  * ``config(mode)``   — the declarative knobs for "smoke" or "full",
+  * ``generate(cfg)``  — build inputs / prepare state (may be a no-op
+    when the wrapped bench generates its own inputs),
+  * ``evaluate(cfg, gen)`` — run the measurement, return the raw report
+    dict (the ported benches reuse their existing ``measure`` code here),
+  * ``report(cfg, raw)``   — map the raw report into the unified
+    ``Result`` record (metrics + counters) that feeds the trend file.
+
+``gates`` declares the scenario's machine-checked contract; the baseline
+differ (``harness.baseline``) evaluates them against a run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from .record import Result
+
+MODES = ("smoke", "full")
+
+
+@dataclass(frozen=True)
+class Gate:
+    """One gated quantity of a scenario's result.
+
+    kind:
+      * ``invariant`` — exact comparison of a counter against ``value``
+        (``op`` one of ==, <=, >=).  Baseline-independent.
+      * ``ratio``     — fixed-threshold comparison of a metric against
+        ``value`` (dimensionless interleaved-A/B ratios: robust to
+        machine drift, so they gate exactly too).
+      * ``walltime``  — band comparison of a metric against the recorded
+        baseline value: fails only beyond ``band`` (or the check's
+        default band) in the bad direction given by
+        ``higher_is_better``; beyond-band improvements pass, reported.
+    """
+
+    metric: str
+    kind: str  # "invariant" | "ratio" | "walltime"
+    op: str = "=="  # invariant/ratio comparison operator
+    value: Optional[float] = None  # invariant/ratio reference
+    band: Optional[float] = None  # walltime band override (fraction)
+    higher_is_better: bool = True  # walltime regression direction
+
+    def __post_init__(self):
+        if self.kind not in ("invariant", "ratio", "walltime"):
+            raise ValueError(f"unknown gate kind: {self.kind}")
+        if self.kind in ("invariant", "ratio"):
+            if self.value is None:
+                raise ValueError(f"{self.kind} gate {self.metric} needs value")
+            if self.op not in ("==", "<=", ">="):
+                raise ValueError(f"unknown gate op: {self.op}")
+
+    def source(self) -> str:
+        return "counters" if self.kind == "invariant" else "metrics"
+
+
+class Scenario:
+    """Base scenario: subclass and override the four hooks."""
+
+    name: str = ""
+    workload: str = ""
+    gates: Tuple[Gate, ...] = ()
+
+    def config(self, mode: str) -> Dict[str, Any]:
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r} (want one of {MODES})")
+        return {"mode": mode}
+
+    def generate(self, cfg: Dict[str, Any]) -> Any:
+        return None
+
+    def evaluate(self, cfg: Dict[str, Any], gen: Any) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def report(self, cfg: Dict[str, Any], raw: Dict[str, Any]) -> Result:
+        raise NotImplementedError
+
+    def run(self, mode: str) -> Result:
+        """The full pipeline; what ``harness run/check/rebaseline`` call."""
+        cfg = self.config(mode)
+        raw = self.evaluate(cfg, self.generate(cfg))
+        result = self.report(cfg, raw)
+        missing = [
+            g.metric
+            for g in self.gates
+            if g.kind != "walltime"
+            and g.metric not in getattr(result, g.source())
+        ]
+        if missing:
+            raise ValueError(
+                f"scenario {self.name}: report() dropped gated keys: "
+                f"{missing}"
+            )
+        return result
+
+
+REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    if not scenario.name:
+        raise ValueError("scenario needs a name")
+    if scenario.name in REGISTRY:
+        raise ValueError(f"duplicate scenario name: {scenario.name}")
+    REGISTRY[scenario.name] = scenario
+    return scenario

@@ -1,10 +1,16 @@
-"""Benchmark harness entry: one bench per paper table/figure + LM side.
+"""Benchmark suite entry: harness scenarios + the remaining ad-hoc benches.
 
     PYTHONPATH=src python -m benchmarks.run [--full]
 
-CSV rows: name,us_per_call,derived.  ``bench_overhead`` additionally writes
-``BENCH_overhead.json`` (machine-readable overhead-parity record, committed
-so the perf trajectory is tracked PR-over-PR; DESIGN.md §5).
+The four gated cases (overhead, serving, cholesky, lm) run through the
+evaluation harness (DESIGN.md §13) — each appends one unified record to
+``BENCH_trend.jsonl`` — which is also what finally wires ``bench_serving``
+into this suite entry (it previously had no route here at all).  The
+exploratory benches without gates (hierarchy, distributed cholesky,
+roofline) still run as plain modules.  For the gated path with baseline
+diffing use ``python -m benchmarks.harness check`` directly.
+
+CSV rows: name,us_per_call,derived.
 """
 
 from __future__ import annotations
@@ -17,26 +23,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger sizes")
     args = ap.parse_args()
+    mode = "full" if args.full else "smoke"
     quick = not args.full
 
-    from . import (
-        bench_cholesky,
-        bench_cholesky_dist,
-        bench_hierarchy,
-        bench_lm,
-        bench_overhead,
-        bench_roofline,
-    )
+    from benchmarks.harness import REGISTRY, append_trend
+    from benchmarks.harness import scenarios  # noqa: F401 — registers
+
+    from . import bench_cholesky_dist, bench_hierarchy, bench_roofline
 
     print("name,us_per_call,derived")
-    for mod in (
-        bench_cholesky,
-        bench_overhead,
-        bench_hierarchy,
-        bench_cholesky_dist,
-        bench_lm,
-        bench_roofline,
-    ):
+    for name in sorted(REGISTRY):
+        try:
+            append_trend(REGISTRY[name].run(mode))
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            print(f"harness:{name},BENCH_FAILED,{e!r}")
+            traceback.print_exc()
+    for mod in (bench_hierarchy, bench_cholesky_dist, bench_roofline):
         try:
             mod.main(quick=quick)
         except Exception as e:  # noqa: BLE001 — keep the suite going

@@ -24,13 +24,20 @@ def group_wave(wave: Sequence[GTask]) -> Dict[tuple, List[GTask]]:
     """Group independent tasks by (op, arg signature) for batched execution.
 
     Signature captures everything static about the batched launch: operation
-    name, per-arg root datum and block shape.  Tasks sharing a signature
-    differ only in block *indices* -> one vmapped/Pallas-grid launch.
+    name, per-arg access mode, root datum and block shape.  Tasks sharing a
+    signature differ only in block *indices* -> one vmapped/Pallas-grid
+    launch.  Modes are part of the key because the fused launch scatters by
+    the GROUP's write positions: two same-op tasks whose mode vectors
+    differ must never share a launch or the minority task's writes would be
+    dropped (registry operations have fixed modes, so for real workloads
+    this never splits a group — but the invariant must hold for any task
+    stream the dispatcher accepts).
     """
     groups: Dict[tuple, List[GTask]] = defaultdict(list)
     for t in wave:
         key = (
             t.op.name,
+            tuple(t.modes),
             tuple((v.data.id, v.region.shape) for v in t.args),
         )
         groups[key].append(t)

@@ -1,8 +1,11 @@
 """Test-support subsystems that ship with the runtime (not under tests/):
 deterministic fault injection (``repro.testing.faults``) is imported by
 production code at named sites, so recovery paths are exercisable on demand
-from tests, CI gates, and chaos drills alike (DESIGN.md §10)."""
+from tests, CI gates, and chaos drills alike (DESIGN.md §10), and
+``repro.testing.proptest`` is the offline fallback property-test engine
+that keeps the hypothesis property modules running (never skipped) in
+containers where hypothesis cannot be installed (DESIGN.md §13)."""
 
-from . import faults
+from . import faults, proptest
 
-__all__ = ["faults"]
+__all__ = ["faults", "proptest"]

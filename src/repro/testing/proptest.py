@@ -1,0 +1,164 @@
+"""Minimal hypothesis-compatible property-test engine (offline fallback).
+
+The CI container is offline, so ``pip install hypothesis`` can fail; the
+two property-test modules used to ``importorskip`` and silently stop
+running (ISSUE 9).  This module implements the small hypothesis subset
+those tests use — ``given``, ``settings``, and the ``strategies``
+combinators ``integers`` / ``booleans`` / ``sampled_from`` / ``lists`` /
+``permutations`` / ``composite`` — so property tests ALWAYS collect and
+run.  Import it the compatibility way::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # offline container: vendored fallback engine
+        from repro.testing.proptest import given, settings, strategies as st
+
+Semantics: each test draws ``max_examples`` examples from a
+deterministically seeded PRNG (seed = test name), so a run is exactly
+reproducible and CI never flakes on random draws.  On failure the
+falsifying example is attached to the exception.  No shrinking — the
+real hypothesis, when present, wins the import and provides it.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any], label: str = ""):
+        self._draw = draw_fn
+        self._label = label or "strategy"
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)), f"{self._label}.map")
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<proptest.{self._label}>"
+
+
+class _Strategies:
+    """The ``strategies as st`` namespace."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(
+            lambda rng: rng.randint(min_value, max_value),
+            f"integers({min_value}, {max_value})",
+        )
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> Strategy:
+        elements = list(elements)
+        if not elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+        return Strategy(lambda rng: rng.choice(elements), "sampled_from")
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return Strategy(draw, f"lists[{min_size}..{max_size}]")
+
+    @staticmethod
+    def permutations(values: Sequence[Any]) -> Strategy:
+        values = list(values)
+
+        def draw(rng: random.Random):
+            out = list(values)
+            rng.shuffle(out)
+            return out
+
+        return Strategy(draw, "permutations")
+
+    @staticmethod
+    def composite(fn: Callable[..., Any]) -> Callable[..., Strategy]:
+        """``@st.composite`` — ``fn(draw, *args)`` builds one example."""
+
+        @functools.wraps(fn)
+        def builder(*args, **kwargs) -> Strategy:
+            def draw_one(rng: random.Random):
+                return fn(lambda s: s.example(rng), *args, **kwargs)
+
+            return Strategy(draw_one, f"composite:{fn.__name__}")
+
+        return builder
+
+
+strategies = _Strategies()
+st = strategies
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator: attach run settings to a ``given``-wrapped test.
+
+    ``deadline`` (and any other keyword) is accepted and ignored — wall
+    deadlines are a flake source on shared CI boxes, which is why every
+    caller in this repo already passes ``deadline=None``."""
+
+    def apply(fn):
+        fn._proptest_max_examples = max_examples
+        return fn
+
+    return apply
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Decorator: run the test once per drawn example.
+
+    Mirrors hypothesis' call convention: positional strategies append to
+    the test's positional args, keyword strategies pass by name."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_proptest_max_examples", DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test seed: stable across runs and machines
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i + 1}/{n}, seed={seed}): "
+                        f"args={drawn!r} kwargs={drawn_kw!r}"
+                    ) from e
+
+        # mimic hypothesis' wrapper shape: plugins (e.g. anyio's) probe
+        # `obj.hypothesis.inner_test` to find the undecorated function
+        wrapper.hypothesis = type("_Marker", (), {"inner_test": fn})()
+        # strip the strategy-supplied parameters from the visible
+        # signature, or pytest would demand them as fixtures; positional
+        # strategies fill from the rightmost parameter (as in hypothesis)
+        params = list(inspect.signature(fn).parameters.values())
+        if arg_strategies:
+            params = params[: -len(arg_strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        wrapper.__dict__.pop("__wrapped__", None)
+        return wrapper
+
+    return decorate
+
+
+__all__ = ["Strategy", "given", "settings", "st", "strategies"]

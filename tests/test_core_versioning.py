@@ -8,10 +8,11 @@ sequential program order semantics when executed.
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: vendored fallback (DESIGN.md §13)
+    from repro.testing.proptest import given, settings, strategies as st
 
 from repro.core import Access, DepTracker, GData, GTask, Operation
 

@@ -1,0 +1,248 @@
+"""Evaluation-harness unit tests (DESIGN.md §13): trend-record schema,
+baseline diffing on synthetic records, tolerance-band edges, invariant
+exactness, and baseline merge semantics.  All synthetic — no benches run."""
+
+import json
+
+import pytest
+
+from benchmarks.harness import (
+    Gate,
+    MissingBaselineError,
+    Result,
+    Scenario,
+    append_trend,
+    check_result,
+    load_baseline,
+    read_trend,
+    save_baseline,
+    summarize,
+    validate_line,
+)
+from benchmarks.harness.baseline import Finding
+
+
+def _result(metrics=None, counters=None, mode="smoke", scenario="synth"):
+    return Result(
+        scenario=scenario,
+        workload="synthetic",
+        mode=mode,
+        backend="cpu",
+        graphs=["g2"],
+        metrics=metrics or {},
+        counters=counters or {},
+        t=1000.0,
+    )
+
+
+def _baseline_for(result, path, band=0.25):
+    save_baseline([result], path=str(path), band_default=band)
+    return load_baseline(str(path))
+
+
+# ---------------------------------------------------------------- schema
+
+
+def test_validate_line_accepts_round_trip():
+    line = _result({"a": 1.5}, {"c": 2}).to_line()
+    assert validate_line(line) == []
+    back = Result.from_line(line)
+    assert back.metrics == {"a": 1.5}
+    assert back.counters == {"c": 2}
+
+
+def test_validate_line_flags_problems():
+    line = _result({"a": 1.5}, {"c": 2}).to_line()
+    for key in ("scenario", "metrics", "counters", "t", "graphs"):
+        bad = dict(line)
+        del bad[key]
+        assert any(key in p for p in validate_line(bad))
+    bad = dict(line, schema=99)
+    assert any("schema" in p for p in validate_line(bad))
+    bad = dict(line, counters={"c": 1.5})
+    assert any("not an integer" in p for p in validate_line(bad))
+    bad = dict(line, metrics={"a": "fast"})
+    assert any("not numeric" in p for p in validate_line(bad))
+    bad = dict(line, metrics={"a": True})
+    assert any("not numeric" in p for p in validate_line(bad))
+    assert validate_line([1, 2]) == ["record is list, not an object"]
+
+
+def test_append_and_read_trend(tmp_path):
+    path = tmp_path / "trend.jsonl"
+    r1 = _result({"a": 1.0}, {"c": 0})
+    r2 = _result({"a": 2.0}, {"c": 1}, mode="full")
+    append_trend(r1, path=str(path))
+    append_trend(r2, path=str(path))
+    got = read_trend(str(path))
+    assert [r.mode for r in got] == ["smoke", "full"]
+    assert got[1].metrics["a"] == 2.0
+
+
+def test_append_trend_refuses_invalid(tmp_path):
+    path = tmp_path / "trend.jsonl"
+    bad = _result({"a": 1.0}, {"c": 2})
+    bad.schema = 99  # future/unknown schema version
+    with pytest.raises(ValueError, match="invalid trend line"):
+        append_trend(bad, path=str(path))
+    assert not path.exists()
+
+
+# ------------------------------------------------------- baseline diffing
+
+
+def test_missing_baseline_file_raises(tmp_path):
+    with pytest.raises(MissingBaselineError, match="rebaseline"):
+        load_baseline(str(tmp_path / "nope.json"))
+
+
+def test_missing_scenario_is_failure(tmp_path):
+    base = _baseline_for(_result({"m": 10.0}), tmp_path / "b.json")
+    other = _result({"m": 10.0}, scenario="unrecorded")
+    findings = check_result(other, base, [Gate("m", "walltime")])
+    assert [f.status for f in findings] == ["missing_baseline"]
+    assert findings[0].is_failure
+    ok, text = summarize(findings)
+    assert not ok and "FAIL" in text
+
+
+def test_missing_mode_is_failure(tmp_path):
+    base = _baseline_for(_result({"m": 10.0}, mode="full"), tmp_path / "b.json")
+    smoke = _result({"m": 10.0}, mode="smoke")
+    findings = check_result(smoke, base, [Gate("m", "walltime")])
+    assert [f.status for f in findings] == ["missing_baseline"]
+
+
+def test_missing_metric_in_run_is_failure(tmp_path):
+    base = _baseline_for(_result({"m": 10.0}), tmp_path / "b.json")
+    bare = _result({})
+    findings = check_result(bare, base, [Gate("m", "walltime")])
+    assert [f.status for f in findings] == ["missing_metric"]
+    assert findings[0].is_failure
+
+
+def test_walltime_regression_and_improvement(tmp_path):
+    base = _baseline_for(_result({"m": 100.0}), tmp_path / "b.json")
+    gate_hi = [Gate("m", "walltime", higher_is_better=True)]
+    # higher_is_better: below the band is a regression...
+    f = check_result(_result({"m": 70.0}), base, gate_hi)
+    assert [x.status for x in f] == ["regression"] and f[0].is_failure
+    # ...above the band is an improvement, and it PASSES
+    f = check_result(_result({"m": 140.0}), base, gate_hi)
+    assert [x.status for x in f] == ["improvement"] and not f[0].is_failure
+    # in-band is ok
+    f = check_result(_result({"m": 90.0}), base, gate_hi)
+    assert [x.status for x in f] == ["ok"]
+    # direction flips with higher_is_better=False
+    gate_lo = [Gate("m", "walltime", higher_is_better=False)]
+    f = check_result(_result({"m": 140.0}), base, gate_lo)
+    assert [x.status for x in f] == ["regression"]
+    f = check_result(_result({"m": 70.0}), base, gate_lo)
+    assert [x.status for x in f] == ["improvement"]
+
+
+def test_walltime_band_edges_inclusive(tmp_path):
+    base = _baseline_for(_result({"m": 100.0}), tmp_path / "b.json", band=0.25)
+    gate = [Gate("m", "walltime", higher_is_better=True)]
+    # exactly at ref*(1-band) and ref*(1+band): still ok
+    assert check_result(_result({"m": 75.0}), base, gate)[0].status == "ok"
+    assert check_result(_result({"m": 125.0}), base, gate)[0].status == "ok"
+    # just beyond either edge tips over
+    assert (
+        check_result(_result({"m": 74.999}), base, gate)[0].status
+        == "regression"
+    )
+    assert (
+        check_result(_result({"m": 125.001}), base, gate)[0].status
+        == "improvement"
+    )
+
+
+def test_walltime_gate_band_override(tmp_path):
+    base = _baseline_for(_result({"m": 100.0}), tmp_path / "b.json", band=0.25)
+    tight = [Gate("m", "walltime", band=0.05)]
+    assert (
+        check_result(_result({"m": 90.0}), base, tight)[0].status
+        == "regression"
+    )
+    loose = [Gate("m", "walltime", band=0.5)]
+    assert check_result(_result({"m": 60.0}), base, loose)[0].status == "ok"
+
+
+def test_invariant_gate_is_exact_and_baseline_free(tmp_path):
+    # no walltime gates -> no baseline entry needed at all
+    base = {"schema": 1, "scenarios": {}}
+    gates = [Gate("compiles", "invariant", "==", 0)]
+    ok = check_result(_result(counters={"compiles": 0}), base, gates)
+    assert [f.status for f in ok] == ["ok"]
+    bad = check_result(_result(counters={"compiles": 1}), base, gates)
+    assert [f.status for f in bad] == ["invariant_violated"]
+    assert bad[0].is_failure
+    ge = [Gate("shed", "invariant", ">=", 1)]
+    assert (
+        check_result(_result(counters={"shed": 3}), base, ge)[0].status
+        == "ok"
+    )
+
+
+def test_ratio_gate_threshold(tmp_path):
+    base = {"schema": 1, "scenarios": {}}
+    gates = [Gate("speedup", "ratio", ">=", 1.0)]
+    assert (
+        check_result(_result({"speedup": 1.0}), base, gates)[0].status
+        == "ok"
+    )
+    f = check_result(_result({"speedup": 0.93}), base, gates)
+    assert [x.status for x in f] == ["regression"] and f[0].is_failure
+
+
+def test_gate_validation():
+    with pytest.raises(ValueError, match="kind"):
+        Gate("m", "latency")
+    with pytest.raises(ValueError, match="needs value"):
+        Gate("m", "invariant")
+    with pytest.raises(ValueError, match="op"):
+        Gate("m", "ratio", "<", 1.0)
+    # walltime gates need neither op nor value
+    Gate("m", "walltime")
+
+
+def test_save_baseline_merges_modes(tmp_path):
+    path = tmp_path / "b.json"
+    save_baseline([_result({"m": 1.0}, mode="full")], path=str(path))
+    save_baseline([_result({"m": 2.0}, mode="smoke")], path=str(path))
+    base = load_baseline(str(path))
+    entry = base["scenarios"]["synth"]
+    assert entry["full"]["metrics"]["m"] == 1.0
+    assert entry["smoke"]["metrics"]["m"] == 2.0
+    # and the file on disk is valid, sorted JSON
+    on_disk = json.loads(path.read_text())
+    assert on_disk["schema"] == 1
+
+
+def test_scenario_run_rejects_dropped_gated_keys():
+    class Broken(Scenario):
+        name = "broken"
+        gates = (Gate("present", "invariant", "==", 1),)
+
+        def evaluate(self, cfg, gen):
+            return {}
+
+        def report(self, cfg, raw):
+            return _result(counters={"other": 1}, scenario="broken")
+
+    with pytest.raises(ValueError, match="dropped gated keys"):
+        Broken().run("smoke")
+
+    class Fine(Broken):
+        name = "fine"
+
+        def report(self, cfg, raw):
+            return _result(counters={"present": 1}, scenario="fine")
+
+    assert Fine().run("smoke").counters["present"] == 1
+
+
+def test_scenario_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown mode"):
+        Scenario().config("nightly")

@@ -6,20 +6,23 @@ verified against ``TaskDag.independent``), groups sharing an issue slot
 are mutually independent, and slot-launch semantics (gather all reads,
 then scatter all writes) reproduce the sequential program order exactly.
 
-Separate module from test_schedule_fusion so the hypothesis importorskip
-(as in test_core_versioning) does not skip the deterministic tests.
+Separate module from test_schedule_fusion so the property machinery stays
+out of the deterministic tests' import path.  When hypothesis is absent
+(offline CI container) the vendored fallback engine runs the same
+properties — these tests never skip (DESIGN.md §13).
 """
 
 import numpy as np
-import pytest
 
 from repro.core import Access, DepTracker, GData
 from repro.core.executors import plan_schedule
 
 from test_schedule_fusion import _track, mktask
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: vendored fallback (DESIGN.md §13)
+    from repro.testing.proptest import given, settings, strategies as st
 
 
 @st.composite
