@@ -1,0 +1,254 @@
+"""Chaos scenario: self-healing serving under a multi-site fault schedule.
+
+The DESIGN.md §14 acceptance benchmark, TaPS-style (failure-under-load as
+a first-class evaluation axis): a ``BatchServer`` is driven through a
+deterministic, seeded fault schedule that exercises all three self-healing
+mechanisms in one run —
+
+  * a persistently poisoned signature bucket (every drain raises) that
+    must trip its circuit breaker OPEN, half-open after the cooldown, and
+    re-close on the probe once the fault clears (the breaker ROUND TRIP
+    witness),
+  * a fence stall (injected ``drain.stall`` delay longer than the
+    watchdog budget) that must surface as typed ``DrainStalledError``
+    without blocking the tick past the budget,
+  * a device OOM (injected ``launch.oom``) on a stacked chunk that must
+    split, resolve both halves the same tick, and degrade then recover
+    the bucket's batch cap,
+
+plus seeded random transient drain failures sprinkled across the schedule
+(retry + bisect load).  The invariants gated by CI: 100% of submitted
+futures end resolved or typed-failed (``lost_futures == 0``), no tick
+wedges past its budget (``wedged_ticks == 0``), at least one breaker
+round trip / watchdog fire / OOM event was witnessed, and the post-fault
+steady state is back to the §7 replay contract (0 compiles, 1 launch per
+bucket, ``health() == HEALTHY``).
+
+Emits ``BENCH_chaos.json`` (``--smoke``: ``BENCH_chaos.smoke.json``).
+Running through ``python -m benchmarks.harness`` appends the unified
+record — including the new ``TickReport`` self-healing counters — to
+``BENCH_trend.jsonl``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import dd_matrix, spd_matrix
+from repro.core.executors import clear_compile_cache
+from repro.errors import ResourceExhausted, ServeError
+from repro.serve import BatchServer
+from repro.testing import faults
+
+from .common import row
+
+JSON_PATH = "BENCH_chaos.json"
+SMOKE_JSON_PATH = "BENCH_chaos.smoke.json"
+
+_N, _P = 32, 2
+_WATCHDOG_S = 0.3
+_STALL_S = 1.0
+
+
+def _submit(srv: BatchServer, kind: str, seed: int):
+    if kind == "lu":
+        return srv.lu(dd_matrix(_N, seed=seed), partitions=((_P, _P),))
+    return srv.cholesky(spd_matrix(_N, seed=seed), partitions=((_P, _P),))
+
+
+def measure(smoke: bool = False) -> dict:
+    """Run the chaos schedule; writes the per-bench JSON artifact and
+    returns the raw report dict (the harness ChaosScenario's ``evaluate``
+    hook reuses this directly; DESIGN.md §13/§14)."""
+    clear_compile_cache()
+    rng = np.random.default_rng(0)
+    srv = BatchServer(
+        graph="g2",
+        max_batch=4,
+        max_retries=1,
+        watchdog_s=_WATCHDOG_S,
+        breaker_threshold=2,
+        breaker_cooldown=2,
+        degrade_recovery=2,
+        retry_jitter_seed=7,
+    )
+    # a tick that blocks longer than budget + every injected delay + slack
+    # has wedged: nothing in the schedule can legitimately take this long
+    wedge_budget_s = _WATCHDOG_S + _STALL_S + 30.0
+    all_futs = []
+    seed = 0
+    ticks = 0
+    wedged = 0
+
+    def tick() -> None:
+        nonlocal ticks, wedged
+        t0 = time.perf_counter()
+        srv.tick()
+        if time.perf_counter() - t0 > wedge_budget_s:
+            wedged += 1
+        ticks += 1
+
+    def submit(kind: str):
+        nonlocal seed
+        all_futs.append(_submit(srv, kind, seed))
+        seed += 1
+
+    # phase 0 — warmup: capture both buckets' programs healthy
+    for _ in range(2):
+        submit("lu")
+        submit("chol")
+    tick()
+
+    # phase 1 — poisoned chol bucket: every drain raises until the breaker
+    # trips (threshold 2), then the fault clears and the cooldown + probe
+    # must complete the round trip
+    with faults.inject(
+        "serve.drain",
+        lambda: RuntimeError("chaos: poisoned bucket"),
+        when=lambda ctx: ctx["op"] == "potrf",
+        times=None,
+    ):
+        for _ in range(3):
+            submit("chol")
+            submit("lu")  # healthy bystander bucket: must keep resolving
+            tick()
+    for _ in range(4):  # cooldown ticks + half-open probe + re-close
+        submit("chol")
+        tick()
+
+    # phase 2 — fence stall: the watchdog must fail the chunk typed
+    # within budget instead of blocking the tick on the hung fence
+    submit("lu")
+    submit("lu")
+    with faults.inject("drain.stall", delay_s=_STALL_S):
+        tick()
+
+    # phase 3 — device OOM on a full stacked chunk: split halves resolve
+    # the same tick, the bucket's cap degrades then recovers
+    for _ in range(4):
+        submit("lu")
+    with faults.inject(
+        "launch.oom", lambda: ResourceExhausted("RESOURCE_EXHAUSTED: chaos")
+    ):
+        tick()
+
+    # phase 4 — seeded random transient faults (retry + bisect load)
+    chaos_ticks = 2 if smoke else 5
+    for _ in range(chaos_ticks):
+        for _ in range(int(rng.integers(1, 4))):
+            submit("lu")
+        n_raises = int(rng.integers(0, 3))
+        if n_raises:
+            with faults.inject(
+                "serve.drain",
+                lambda: RuntimeError("chaos: transient"),
+                times=n_raises,
+            ):
+                tick()
+        else:
+            tick()
+
+    # phase 5 — recovery: healthy traffic until queue empty, breakers
+    # closed, degradation recovered
+    for i in range(12):
+        submit("lu")
+        submit("chol")
+        tick()
+        if (
+            srv.pending() == 0
+            and srv.health() == "HEALTHY"
+            and all(f.done for f in all_futs)
+        ):
+            break
+
+    # phase 6 — steady state: the §7 replay contract must hold again
+    def steady_tick():
+        for _ in range(2):
+            submit("lu")
+        for _ in range(2):
+            submit("chol")
+        tick()
+
+    clear_steady = []
+    for _ in range(3):
+        before = dict(srv.stats)
+        steady_tick()
+        clear_steady.append(
+            {
+                "compiles": srv.stats["compiles"] - before["compiles"],
+                "launches": srv.stats["launches"] - before["launches"],
+                "failed": srv.stats["failed"] - before["failed"],
+                "drains": srv.stats["drains"] - before["drains"],
+            }
+        )
+    steady = clear_steady[-1]  # first steady tick may still recompile
+    steady_ok = int(
+        steady["compiles"] == 0
+        and steady["failed"] == 0
+        and steady["launches"] == steady["drains"] == 2  # one per bucket
+    )
+
+    resolved = typed_failed = lost = untyped = 0
+    for f in all_futs:
+        if not f.done:
+            lost += 1
+        elif f.exception() is None:
+            resolved += 1
+        elif isinstance(f.exception(), ServeError):
+            typed_failed += 1
+        else:
+            untyped += 1
+
+    report = {
+        "bench": "chaos",
+        "backend": jax.default_backend(),
+        "mode": "smoke" if smoke else "full",
+        "submitted": len(all_futs),
+        "resolved": resolved,
+        "typed_failed": typed_failed,
+        "untyped_failed": untyped,
+        "lost_futures": lost,
+        "ticks": ticks,
+        "wedged_ticks": wedged,
+        "wedge_budget_s": wedge_budget_s,
+        "breaker_trips": srv.stats["breaker_trips"],
+        "breaker_closes": srv.stats["breaker_closes"],
+        "breaker_round_trips": srv.breaker_round_trips(),
+        "breaker_fast_fails": srv.stats["breaker_fast_fails"],
+        "watchdog_fires": srv.stats["watchdog_fires"],
+        "oom_events": srv.stats["oom_events"],
+        "final_health": srv.health(),
+        "final_health_healthy": int(srv.health() == "HEALTHY"),
+        "steady_state": steady,
+        "steady_state_ok": steady_ok,
+        "server_stats": dict(srv.stats),
+    }
+    row(
+        "serve_chaos",
+        0.0,
+        f"{resolved}/{len(all_futs)} resolved typed_failed={typed_failed} "
+        f"lost={lost} wedged={wedged} "
+        f"breaker_rt={report['breaker_round_trips']} "
+        f"watchdog={report['watchdog_fires']} oom={report['oom_events']} "
+        f"health={report['final_health']}",
+    )
+
+    path = SMOKE_JSON_PATH if smoke else JSON_PATH
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return report
+
+
+def main(smoke: bool = False) -> None:
+    measure(smoke=smoke)
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -235,6 +235,82 @@ class ServingScenario(Scenario):
         )
 
 
+class ChaosScenario(Scenario):
+    """Self-healing serving under a multi-site fault schedule
+    (bench_chaos; DESIGN.md §14).
+
+    All gates are invariants — no recorded-baseline entry needed: the
+    contract is exact (every future accounted for, every mechanism
+    witnessed, steady state restored), not a timing band."""
+
+    name = "chaos"
+    workload = "serving"
+    gates = (
+        # no lost futures: 100% of submits end resolved or typed-failed
+        Gate("lost_futures", "invariant", "==", 0),
+        Gate("untyped_failed", "invariant", "==", 0),
+        Gate("accounting_ok", "invariant", "==", 1),
+        # no tick blocked past the watchdog budget (+ injected delays)
+        Gate("wedged_ticks", "invariant", "==", 0),
+        # every self-healing mechanism witnessed at least once
+        Gate("breaker_round_trips", "invariant", ">=", 1),
+        Gate("watchdog_fires", "invariant", ">=", 1),
+        Gate("oom_events", "invariant", ">=", 1),
+        # post-fault recovery: breakers closed, caps restored, and the
+        # steady-state tick back to the §7 replay contract
+        Gate("final_health_healthy", "invariant", "==", 1),
+        Gate("steady_state_ok", "invariant", "==", 1),
+    )
+
+    def config(self, mode: str) -> Dict[str, Any]:
+        cfg = super().config(mode)
+        cfg["smoke"] = mode == "smoke"
+        return cfg
+
+    def evaluate(self, cfg, gen) -> Dict[str, Any]:
+        from benchmarks import bench_chaos
+
+        return bench_chaos.measure(smoke=cfg["smoke"])
+
+    def report(self, cfg, raw) -> Result:
+        counters = {
+            k: int(raw[k])
+            for k in (
+                "submitted",
+                "resolved",
+                "typed_failed",
+                "untyped_failed",
+                "lost_futures",
+                "ticks",
+                "wedged_ticks",
+                "breaker_trips",
+                "breaker_closes",
+                "breaker_round_trips",
+                "breaker_fast_fails",
+                "watchdog_fires",
+                "oom_events",
+                "final_health_healthy",
+                "steady_state_ok",
+            )
+        }
+        counters["accounting_ok"] = int(
+            raw["resolved"] + raw["typed_failed"] + raw["untyped_failed"]
+            == raw["submitted"]
+            and raw["lost_futures"] == 0
+        )
+        counters["steady_compiles"] = int(raw["steady_state"]["compiles"])
+        counters["steady_launches"] = int(raw["steady_state"]["launches"])
+        return Result(
+            scenario=self.name,
+            workload=self.workload,
+            mode=cfg["mode"],
+            backend=raw["backend"],
+            graphs=["g2"],
+            metrics={"wedge_budget_s": raw["wedge_budget_s"]},
+            counters=counters,
+        )
+
+
 class CholeskyScenario(Scenario):
     """Task-flow config sweep C1-C6 analog (bench_cholesky; paper Fig. 3a).
 
@@ -333,10 +409,12 @@ class LmScenario(Scenario):
 
 register(OverheadScenario())
 register(ServingScenario())
+register(ChaosScenario())
 register(CholeskyScenario())
 register(LmScenario())
 
 __all__ = [
+    "ChaosScenario",
     "CholeskyScenario",
     "LmScenario",
     "OverheadScenario",

@@ -46,9 +46,12 @@ else
 fi
 
 echo "== gate: evaluation harness check --mode smoke (DESIGN.md §13) =="
-# runs the four gated scenarios (overhead, serving incl. overload, cholesky,
-# lm), appends unified records to BENCH_trend.jsonl, and diffs every declared
-# gate against BENCH_baseline.json; BENCH_report.json is the CI artifact
+# runs the five gated scenarios (overhead, serving incl. overload, chaos,
+# cholesky, lm), appends unified records to BENCH_trend.jsonl, and diffs every
+# declared gate against BENCH_baseline.json; BENCH_report.json is the CI
+# artifact.  The chaos scenario (DESIGN.md §14) is invariant-only: no
+# baseline entry, gates on lost_futures == 0 / wedged_ticks == 0 / breaker
+# round-trip + watchdog + OOM witnesses / steady-state restoration
 python -m benchmarks.harness check --mode smoke --report BENCH_report.json
 echo "harness report artifact: BENCH_report.json"
 
@@ -212,6 +215,42 @@ check(rep.bisected >= 1 and rep.resolved == 4 and rep.failed == 0,
 check(all(f.done for f in futs), "drain.inflight: half-resolved futures")
 for f in futs:
     check(f.exception() is None, "drain.inflight: healthy request failed")
+
+# drain.stall (DESIGN.md §14): a hung fence blows the watchdog budget —
+# typed DrainStalledError on the stalled bucket only, the tick never blocks
+# past budget + injected delay, and the next tick is healthy again
+from repro.errors import DrainStalledError, ResourceExhausted
+
+clear_compile_cache()
+srv = BatchServer(graph="g2", watchdog_s=0.05)
+futs = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(2)]
+with faults.inject("drain.stall", delay_s=0.2):
+    rep = srv.tick()
+check(rep.watchdog_fires == 1, "drain.stall: watchdog did not fire")
+check(all(isinstance(f.exception(), DrainStalledError) for f in futs),
+      "drain.stall: stalled futures lack DrainStalledError")
+futs = [srv.lu(dd_matrix(32, seed=10 + s), partitions=((2, 2),))
+        for s in range(2)]
+rep = srv.tick()
+check(rep.resolved == 2 and rep.watchdog_fires == 0,
+      "drain.stall: post-stall tick not healthy")
+
+# launch.oom (DESIGN.md §14): device OOM on a stacked chunk re-drains as
+# split halves the same tick (no request lost), halves the bucket's batch
+# cap, and healthy drains recover it
+clear_compile_cache()
+srv = BatchServer(graph="g2", max_batch=4, degrade_recovery=3)
+futs = [srv.lu(dd_matrix(32, seed=s), partitions=((2, 2),)) for s in range(4)]
+with faults.inject("launch.oom",
+                   lambda: ResourceExhausted("RESOURCE_EXHAUSTED")):
+    rep = srv.tick()
+check(rep.oom_events == 1 and rep.resolved == 4 and rep.failed == 0,
+      f"launch.oom: split re-drain lost requests ({rep.resolved} ok, "
+      f"{rep.failed} bad)")
+check(srv.health() == "DEGRADED", "launch.oom: bucket not degraded after OOM")
+srv.lu(dd_matrix(32, seed=50), partitions=((2, 2),))
+srv.tick()
+check(srv.health() == "HEALTHY", "launch.oom: degradation did not recover")
 
 if fail:
     print("FAULT GATE FAILED:\n  " + "\n  ".join(fail))

@@ -15,12 +15,14 @@ leaf executor runs the waves.  This is the AOT realization of the paper's
 from __future__ import annotations
 
 import os
+import time
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
 from ..analysis.hazards import analyze_hazards
 from ..analysis.verify import verify_stacked_members
+from ..errors import DrainStalledError
 from ..testing import faults
 from .executors.base import Executor
 from .executors.inline import InlineExecutor
@@ -82,13 +84,44 @@ class DrainHandle:
         for key in keys:
             _DRAIN_MEMO.discard(key)
 
-    def wait(self) -> float:
+    def wait(self, timeout: Optional[float] = None) -> float:
         """Fence: block until every launch's live outputs materialize;
         returns host seconds spent blocked.  Epochs are fenced in launch
         order and donated buffers are skipped (the donation handshake,
         DESIGN.md §12), so overlapped re-drains over the same data are safe
-        to fence even after their grids were donated forward."""
+        to fence even after their grids were donated forward.
+
+        ``timeout`` (seconds) arms the hung-drain watchdog (DESIGN.md §14):
+        XLA fences are not interruptible-by-value, so the budget is a
+        polling deadline — readiness is polled until the wall clock expires,
+        at which point this drain's memo keys are invalidated and a
+        ``DrainStalledError`` raised.  The hung computation's device
+        resources are NOT reclaimed (only a process restart does that); the
+        watchdog bounds how long the host-side tick loop can be held
+        hostage, nothing more.
+        """
         try:
+            if timeout is not None:
+                deadline = time.monotonic() + timeout
+                # The stall site fires BEFORE the first readiness poll so an
+                # injected delay_s fault deterministically blows the budget
+                # even when results are already materialized.
+                faults.fire(
+                    "drain.stall", epochs=len(self.epochs), leaves=self.leaves
+                )
+                while not self.is_ready():
+                    if time.monotonic() >= deadline:
+                        raise DrainStalledError(
+                            f"drain fence not ready within {timeout:.3f}s "
+                            f"budget ({len(self.epochs)} epoch(s), "
+                            f"{self.leaves} leaves)"
+                        )
+                    time.sleep(min(0.001, timeout / 10))
+                if time.monotonic() >= deadline:
+                    raise DrainStalledError(
+                        f"drain fence blew its {timeout:.3f}s budget "
+                        f"({len(self.epochs)} epoch(s), {self.leaves} leaves)"
+                    )
             faults.fire(
                 "drain.inflight", epochs=len(self.epochs), leaves=self.leaves
             )

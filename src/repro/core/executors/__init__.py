@@ -4,6 +4,7 @@ from .jit_wave import (
     JitWaveExecutor,
     PallasExecutor,
     clear_compile_cache,
+    drain_memo_pressure,
     drain_memo_stats,
     set_drain_memo_capacity,
 )
@@ -19,6 +20,7 @@ __all__ = [
     "ShardExecutor",
     "build_program",
     "clear_compile_cache",
+    "drain_memo_pressure",
     "drain_memo_stats",
     "group_wave",
     "plan_schedule",

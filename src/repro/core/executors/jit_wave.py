@@ -73,6 +73,7 @@ class DrainMemo:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.pressure_sheds = 0
 
     def get(self, key: tuple):
         entry = self._entries.get(key)
@@ -109,6 +110,23 @@ class DrainMemo:
             del self._entries[key]
             self.invalidations += 1
 
+    def shed(self, fraction: float = 0.5) -> int:
+        """Evict the least-recently-used ``fraction`` of entries; returns
+        the count shed.  The memory-pressure hook (DESIGN.md §14): a device
+        OOM means resident state must shrink NOW, and memo entries pin
+        device-side index arrays plus compiled-program references — the LRU
+        tail is exactly the state least likely to be replayed soon.
+        Correctness is unaffected (a shed drain re-captures on its next
+        occurrence); counted under ``pressure_sheds``."""
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(f"shed fraction must be in (0, 1], got {fraction}")
+        n = min(len(self._entries), max(1, int(len(self._entries) * fraction))) \
+            if self._entries else 0
+        for _ in range(n):
+            self._entries.popitem(last=False)
+        self.pressure_sheds += n
+        return n
+
     def stats(self) -> Dict[str, int]:
         return {
             "entries": len(self._entries),
@@ -117,6 +135,7 @@ class DrainMemo:
             "misses": self.misses,
             "evictions": self.evictions,
             "invalidations": self.invalidations,
+            "pressure_sheds": self.pressure_sheds,
         }
 
     # dict-compatible surface (tests introspect the memo directly)
@@ -149,6 +168,16 @@ def set_drain_memo_capacity(capacity: int) -> None:
 def drain_memo_stats() -> Dict[str, int]:
     """Entries/capacity/hits/misses/evictions of the global drain memo."""
     return _DRAIN_MEMO.stats()
+
+
+def drain_memo_pressure(fraction: float = 0.5) -> int:
+    """Shed the LRU ``fraction`` of the global drain memo (DESIGN.md §14).
+
+    The memory-pressure callback: called by the serving layer on a device
+    OOM (and available to any embedder's allocator hooks) so resident
+    compiled-program state shrinks alongside the batch-cap degradation.
+    Returns the number of entries shed."""
+    return _DRAIN_MEMO.shed(fraction)
 
 
 def clear_compile_cache() -> None:
@@ -252,6 +281,9 @@ class JitWaveExecutor(Executor):
         faults.fire(
             "executor.launch", batch=rec.batch, n_tasks=rec.n_tasks,
             replay=True,
+        )
+        faults.fire(
+            "launch.oom", batch=rec.batch, n_tasks=rec.n_tasks, replay=True,
         )
         if rec.batch is not None:
             grids = self._stack_grids(datas, rec.blocks, rec.batch)
@@ -443,6 +475,9 @@ class JitWaveExecutor(Executor):
         faults.fire(
             "executor.launch", batch=batch, n_tasks=len(plan.tasks),
             replay=False,
+        )
+        faults.fire(
+            "launch.oom", batch=batch, n_tasks=len(plan.tasks), replay=False,
         )
         outs = fn(grids, idxs)
         outs = faults.corrupt(

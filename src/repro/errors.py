@@ -8,11 +8,24 @@ concrete type:
     ServeError
     ├── DrainError        a dispatcher drain raised (compile/launch/capture
     │                     failure); ``__cause__`` carries the original
-    │   └── InflightError the drain dispatched but FAILED before its
-    │                     in-flight results materialized (overlapped
-    │                     execution, DESIGN.md §12) — detected at the
-    │                     deferred resolution fence; retryable like any
-    │                     DrainError
+    │   ├── InflightError the drain dispatched but FAILED before its
+    │   │                 in-flight results materialized (overlapped
+    │   │                 execution, DESIGN.md §12) — detected at the
+    │   │                 deferred resolution fence; retryable like any
+    │   │                 DrainError
+    │   ├── DrainStalledError
+    │   │                 the hung-drain watchdog's wall-clock budget
+    │   │                 expired before the drain's fence became ready
+    │   │                 (DESIGN.md §14) — the drain's memo entries were
+    │   │                 invalidated; NEVER retried (a re-drain would
+    │   │                 race the same hung computation)
+    │   └── ResourceExhausted
+    │                     the device ran out of memory launching a stacked
+    │                     program (XLA RESOURCE_EXHAUSTED); the serving
+    │                     layer degrades the bucket's batch cap and
+    │                     re-drains split halves (DESIGN.md §14) — only a
+    │                     request that OOMs ALONE lands this on its
+    │                     future, so it is never retried at full size
     ├── NumericalError    a drain completed but produced non-finite values
     │                     (singular pivot, overflow) — deterministic, so
     │                     NEVER retried
@@ -20,6 +33,10 @@ concrete type:
     │                     drained; the request was failed WITHOUT draining
     ├── RejectedError     admission control shed the request (queue at
     │                     ``max_pending``) — it was never queued/drained
+    ├── CircuitOpenError  the request's signature bucket has its circuit
+    │                     breaker OPEN (persistent drain failures,
+    │                     DESIGN.md §14): failed fast WITHOUT draining;
+    │                     the bucket half-opens after a cooldown
     └── ScheduleVerificationError
                           the static verifier (DESIGN.md §11) proved a
                           schedule invariant violated — a race the
@@ -60,6 +77,40 @@ class InflightError(DrainError):
     ``drain.inflight`` fault) lands here.  The drain's memo entries were
     already invalidated by the handle.  A ``DrainError`` subclass: transient
     by assumption, retried within the request's budget.
+    """
+
+
+class DrainStalledError(DrainError):
+    """The hung-drain watchdog fired: the drain's fence did not become
+    ready within its wall-clock budget (DESIGN.md §14).
+
+    The stalled drain's memo entries were invalidated before this raised.
+    NOT retried despite being a ``DrainError``: the hung computation still
+    owns its device resources (XLA fences are not interruptible-by-value),
+    so a retry would queue behind — or deadlock with — the very
+    computation that stalled.  Only process restart reclaims the device.
+    """
+
+
+class ResourceExhausted(DrainError):
+    """A launch failed with device OOM (XLA ``RESOURCE_EXHAUSTED``).
+
+    The serving layer treats this as *pressure*, not poison: the bucket's
+    batch cap is halved, drain-memo entries are shed, and the chunk
+    re-drains as split halves (DESIGN.md §14).  It lands on a future only
+    when a SINGLE request still OOMs, which re-running at the same size
+    deterministically reproduces — so it is never retried.
+    """
+
+
+class CircuitOpenError(ServeError):
+    """The request's signature bucket is circuit-broken (DESIGN.md §14).
+
+    A bucket whose drains keep failing trips its breaker OPEN: queued and
+    incoming requests of that signature fail fast, without draining, so a
+    persistently poisoned workload class cannot starve the tick loop or
+    burn the retry budget of healthy buckets.  After a cooldown the
+    breaker half-opens and a single probe request tests recovery.
     """
 
 
@@ -115,12 +166,15 @@ class LintError(Exception):
 
 
 __all__ = [
+    "CircuitOpenError",
     "DeadlineExceeded",
     "DrainError",
+    "DrainStalledError",
     "InflightError",
     "LintError",
     "NumericalError",
     "RejectedError",
+    "ResourceExhausted",
     "ScheduleVerificationError",
     "ServeError",
 ]

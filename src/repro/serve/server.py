@@ -42,6 +42,7 @@ that attach the right partitions and result extraction.
 from __future__ import annotations
 
 import itertools
+import random
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -52,13 +53,17 @@ import numpy as np
 
 from ..core import Dispatcher, GData, GTask
 from ..core.dispatcher import DrainHandle
+from ..core.executors import drain_memo_pressure
 from ..core.operation import OpRegistry
 from ..errors import (
+    CircuitOpenError,
     DeadlineExceeded,
     DrainError,
+    DrainStalledError,
     InflightError,
     NumericalError,
     RejectedError,
+    ResourceExhausted,
     ScheduleVerificationError,
     ServeError,
 )
@@ -67,15 +72,31 @@ from ..testing import faults
 
 _rid = itertools.count()
 
-#: errors that re-running the same request deterministically reproduces —
-#: failing fast beats burning the retry budget on them (a schedule that
-#: fails verification will fail verification identically on every retry)
+#: errors a retry cannot fix — deterministic reproductions (NumericalError,
+#: ScheduleVerificationError, single-request ResourceExhausted), already-
+#: decided outcomes (DeadlineExceeded, RejectedError), or failures whose
+#: retry would race live device state (DrainStalledError: the hung
+#: computation still owns its resources, DESIGN.md §14) — failing fast
+#: beats burning the retry budget on them
 _NON_RETRYABLE = (
     NumericalError,
     DeadlineExceeded,
     RejectedError,
     ScheduleVerificationError,
+    DrainStalledError,
+    ResourceExhausted,
 )
+
+
+def _is_oom(e: BaseException) -> bool:
+    """True iff ``e`` is a device out-of-memory failure: either our typed
+    ``ResourceExhausted`` (injected or pre-wrapped) or a runtime error
+    carrying XLA's RESOURCE_EXHAUSTED text (``XlaRuntimeError`` is not
+    importable on every backend, so the match is textual by design)."""
+    if isinstance(e, ResourceExhausted):
+        return True
+    s = str(e)
+    return "RESOURCE_EXHAUSTED" in s or "out of memory" in s.lower()
 
 
 class ServeFuture:
@@ -186,6 +207,15 @@ class TickReport:
     # pipeline accounting (DESIGN.md §12)
     host_idle_us: float = 0.0  # host time blocked on device results
     overlap_ratio: float = 1.0  # 1 - host_idle / tick wall time
+    # self-healing accounting (DESIGN.md §14)
+    breaker_state: str = "closed"  # worst across buckets after this tick
+    breaker_trips: int = 0  # breakers that tripped OPEN this tick
+    breaker_closes: int = 0  # breakers that re-CLOSED this tick
+    breaker_fast_fails: int = 0  # queued requests failed fast (open bucket)
+    watchdog_fires: int = 0  # chunks stalled past the watchdog budget
+    oom_events: int = 0  # device-OOM launches (each halves a bucket cap)
+    degraded_buckets: int = 0  # buckets below full max_batch after this tick
+    health: str = "HEALTHY"  # server health after this tick
 
 
 @dataclass
@@ -199,6 +229,37 @@ class _Launched:
     dispatcher: Dispatcher
     handle: DrainHandle
     probes: Optional[List[list]]  # per member: [(device probe, lane|None)]
+
+
+#: breaker state ordering for the tick report's worst-across-buckets field
+_BREAKER_SEVERITY = {"closed": 0, "half_open": 1, "open": 2}
+
+
+@dataclass
+class _Breaker:
+    """Per-signature circuit breaker (DESIGN.md §14).
+
+    ``failures`` counts consecutive isolated drain failures for the bucket;
+    ANY successful chunk resets it, so bisecting a single poisoned request
+    out of a healthy chunk (successes interleave with the failing halves)
+    never trips the breaker — only a bucket that keeps failing does.
+    """
+
+    state: str = "closed"  # closed | open | half_open
+    failures: int = 0  # consecutive failures (successes reset)
+    opened_tick: int = -1  # tick the breaker last tripped OPEN
+    round_trips: int = 0  # completed open -> half_open -> closed cycles
+
+
+@dataclass
+class _Degrade:
+    """Per-signature degradation level under memory pressure (DESIGN.md
+    §14): the bucket's effective batch cap is ``max_batch >> level``.
+    ``healthy`` counts OOM-free chunk drains since the last OOM; every
+    ``degrade_recovery`` of them steps the level back down one."""
+
+    level: int = 0
+    healthy: int = 0
 
 
 class BatchServer:
@@ -226,6 +287,21 @@ class BatchServer:
     identical results, the interleaved-A/B baseline.  ``latency_window``
     bounds the rolling latency history (a ring buffer, so a long-running
     server's percentile cost stays O(window), not O(lifetime)).
+
+    Self-healing (DESIGN.md §14): ``breaker_threshold`` consecutive
+    isolated drain failures trip a signature bucket's circuit breaker OPEN
+    (queued + incoming requests of that signature fail fast with
+    ``CircuitOpenError``); after ``breaker_cooldown`` ticks the breaker
+    half-opens and a single probe request decides re-close vs re-open.
+    ``watchdog_s`` arms the hung-drain watchdog: a chunk whose fence is
+    not ready within the budget fails its futures with
+    ``DrainStalledError`` (memo invalidated, no retry — the hung
+    computation still owns its device resources).  Device OOM on a launch
+    halves the bucket's effective batch cap, sheds drain-memo entries,
+    and re-drains split halves; ``degrade_recovery`` OOM-free drains step
+    the cap back up.  ``retry_jitter_seed`` arms deterministic full-jitter
+    on the retry backoff.  ``health()`` reports HEALTHY / DEGRADED /
+    DRAINING; ``drain()`` flushes the queue and rejects new submits.
     """
 
     def __init__(
@@ -241,6 +317,11 @@ class BatchServer:
         overlap: bool = True,
         latency_window: int = 4096,
         clock: Callable[[], float] = time.monotonic,
+        retry_jitter_seed: Optional[int] = None,
+        watchdog_s: Optional[float] = None,
+        breaker_threshold: int = 5,
+        breaker_cooldown: int = 3,
+        degrade_recovery: int = 8,
     ):
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(
@@ -261,6 +342,20 @@ class BatchServer:
             raise ValueError(
                 f"latency_window must be >= 1, got {latency_window}"
             )
+        if watchdog_s is not None and watchdog_s <= 0:
+            raise ValueError(f"watchdog_s must be > 0, got {watchdog_s}")
+        if breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {breaker_threshold}"
+            )
+        if breaker_cooldown < 1:
+            raise ValueError(
+                f"breaker_cooldown must be >= 1, got {breaker_cooldown}"
+            )
+        if degrade_recovery < 1:
+            raise ValueError(
+                f"degrade_recovery must be >= 1, got {degrade_recovery}"
+            )
         self.graph = graph
         self.mesh = mesh
         self.max_batch = max_batch
@@ -271,6 +366,21 @@ class BatchServer:
         self.check_finite = check_finite
         self.overlap = bool(overlap)
         self._clock = clock
+        # self-healing policy + state (DESIGN.md §14)
+        self.watchdog_s = watchdog_s
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown = breaker_cooldown
+        self.degrade_recovery = degrade_recovery
+        # full-jitter on the exponential retry backoff: None keeps the
+        # deterministic schedule; a seed draws each delay uniformly from
+        # [1, cap] so synchronized bucket retries don't stampede a
+        # recovering device — seedable, hence reproducible in tests
+        self._jitter_rng = (
+            None if retry_jitter_seed is None else random.Random(retry_jitter_seed)
+        )
+        self._breakers: Dict[tuple, _Breaker] = {}
+        self._degraded: Dict[tuple, _Degrade] = {}
+        self._draining = False
         self._queues: Dict[tuple, List[_Pending]] = {}
         # rolling window of resolved-request latencies (ms) for p50/p99 —
         # a bounded ring buffer, NOT an unbounded list (a long-running
@@ -293,6 +403,11 @@ class BatchServer:
             "shed": 0,
             "bisected": 0,
             "host_idle_us": 0,
+            "breaker_trips": 0,
+            "breaker_closes": 0,
+            "breaker_fast_fails": 0,
+            "watchdog_fires": 0,
+            "oom_events": 0,
         }
 
     # -- request surface -------------------------------------------------------
@@ -338,6 +453,26 @@ class BatchServer:
         )
         fut = ServeFuture(next(_rid), sig)
         self.stats["requests"] += 1
+        if self._draining:
+            fut._fail(
+                RejectedError(
+                    f"request rid={fut.rid} rejected: server is draining "
+                    f"(graceful shutdown in progress)"
+                )
+            )
+            return fut
+        br = self._breakers.get(sig)
+        if br is not None and br.state == "open":
+            self.stats["breaker_fast_fails"] += 1
+            fut._fail(
+                CircuitOpenError(
+                    f"request rid={fut.rid} ({op.name}): signature bucket "
+                    f"circuit-broken after {br.failures} consecutive drain "
+                    f"failures; half-opens {self.breaker_cooldown} tick(s) "
+                    f"after trip"
+                )
+            )
+            return fut
         if self.max_pending is not None and self.pending() >= self.max_pending:
             if not self._shed_for(fut):
                 return fut  # rejected: future already failed
@@ -486,10 +621,33 @@ class BatchServer:
         now = self._clock()
         report = TickReport()
         self._tick_lat = []
+        # breaker cooldown sweep: an OPEN breaker whose cooldown has
+        # elapsed half-opens — one probe request (below) decides its fate
+        for br in self._breakers.values():
+            if (
+                br.state == "open"
+                and tick_no >= br.opened_tick + self.breaker_cooldown
+            ):
+                br.state = "half_open"
         queues, self._queues = self._queues, {}
         held: Dict[tuple, List[_Pending]] = {}
         ready: Dict[tuple, List[_Pending]] = {}
         for sig, pend in queues.items():
+            br = self._breakers.get(sig)
+            if br is not None and br.state == "open":
+                # fail-fast the whole bucket: no drain, no retry budget
+                for p in pend:
+                    report.breaker_fast_fails += 1
+                    self._finish_fail(
+                        p,
+                        CircuitOpenError(
+                            f"request rid={p.future.rid} ({p.op.name}): "
+                            f"signature bucket circuit-broken"
+                        ),
+                        report,
+                    )
+                continue
+            probe_taken = False
             for p in pend:
                 if p.deadline is not None and now >= p.deadline:
                     self._finish_fail(
@@ -503,17 +661,21 @@ class BatchServer:
                     )
                 elif p.not_before > tick_no:
                     held.setdefault(sig, []).append(p)  # retry backoff
+                elif br is not None and br.state == "half_open" and probe_taken:
+                    held.setdefault(sig, []).append(p)  # behind the probe
                 else:
                     ready.setdefault(sig, []).append(p)
+                    probe_taken = True  # half-open: FIRST ready = the probe
         report.buckets = len(ready)
         retried: Dict[tuple, List[_Pending]] = {}
         # phase 1 — launch: every chunk's program dispatches back-to-back;
         # with overlap on, no device fence separates the launches
         launched: Optional[List[_Launched]] = [] if self.overlap else None
         for sig, pend in ready.items():
-            for lo in range(0, len(pend), self.max_batch):
+            cap = self._bucket_cap(sig)  # degraded buckets drain smaller
+            for lo in range(0, len(pend), cap):
                 self._launch_chunk(
-                    sig, pend[lo : lo + self.max_batch], report, retried,
+                    sig, pend[lo : lo + cap], report, retried,
                     tick_no, launched,
                 )
         # phase 2/3 — deferred-validate + resolve (end-of-tick): the only
@@ -536,6 +698,15 @@ class BatchServer:
             report.overlap_ratio = max(
                 0.0, 1.0 - report.host_idle_us / (wall * 1e6)
             )
+        report.degraded_buckets = sum(
+            1 for deg in self._degraded.values() if deg.level > 0
+        )
+        report.breaker_state = max(
+            (br.state for br in self._breakers.values()),
+            key=_BREAKER_SEVERITY.__getitem__,
+            default="closed",
+        )
+        report.health = self.health()
         for k in (
             "drains",
             "launches",
@@ -548,6 +719,11 @@ class BatchServer:
             "expired",
             "retried",
             "bisected",
+            "breaker_trips",
+            "breaker_closes",
+            "breaker_fast_fails",
+            "watchdog_fires",
+            "oom_events",
         ):
             self.stats[k] += getattr(report, k)
         self.stats["host_idle_us"] += int(report.host_idle_us)
@@ -571,6 +747,33 @@ class BatchServer:
         try:
             d, handle = self._drain_chunk(chunk)
         except Exception as e:  # noqa: BLE001 — typed at the future boundary
+            if _is_oom(e):
+                # pressure, not poison (DESIGN.md §14): halve the bucket's
+                # cap, shed memo entries, and re-drain as split halves —
+                # no retry budget consumed, no breaker failure noted
+                self._oom_degrade(sig, report)
+                if len(chunk) > 1:
+                    mid = len(chunk) // 2
+                    self._launch_chunk(
+                        sig, chunk[:mid], report, retried, tick_no, launched
+                    )
+                    self._launch_chunk(
+                        sig, chunk[mid:], report, retried, tick_no, launched
+                    )
+                    return
+                # a SINGLE request that still OOMs reproduces at any size:
+                # typed terminal failure, never retried
+                p = chunk[0]
+                if isinstance(e, ResourceExhausted):
+                    err = e
+                else:
+                    err = ResourceExhausted(
+                        f"request rid={p.future.rid} ({p.op.name}) OOMs "
+                        f"even as a singleton drain: {e}"
+                    )
+                    err.__cause__ = e
+                self._finish_fail(p, err, report)
+                return
             if len(chunk) == 1:
                 self._fail_or_retry(sig, chunk[0], e, report, retried, tick_no)
                 return
@@ -614,6 +817,10 @@ class BatchServer:
         (immediately finalized) half re-drains, typed ``InflightError`` at
         the single-request leaf."""
         chunk = item.chunk
+        if self.watchdog_s is not None and not self._watchdog_fence(
+            item, report, retried, tick_no
+        ):
+            return  # stalled: futures failed, memo invalidated
         try:
             faults.fire(
                 "drain.inflight",
@@ -646,6 +853,7 @@ class BatchServer:
                 item.sig, chunk[mid:], report, retried, tick_no, None
             )
             return
+        self._note_chunk_success(item.sig, report)
         now = self._clock()
         for i, p in enumerate(chunk):
             if i in bad:
@@ -755,6 +963,171 @@ class BatchServer:
         report.host_idle_us += (time.perf_counter() - t0) * 1e6
         return bad
 
+    # -- self-healing: watchdog, breakers, degradation (DESIGN.md §14) ---------
+    def _watchdog_fence(
+        self,
+        item: _Launched,
+        report: TickReport,
+        retried: Dict[tuple, List[_Pending]],
+        tick_no: int,
+    ) -> bool:
+        """Bounded readiness fence over one launched chunk; True iff the
+        chunk became ready within ``watchdog_s``.
+
+        XLA fences are not interruptible-by-value, so the budget is a
+        polling deadline over ``handle.is_ready()``.  On timeout the
+        drain's memo keys are invalidated (this execution can no longer
+        vouch for them) and every member future fails with
+        ``DrainStalledError`` — no bisect (the whole fence is stalled, not
+        one request) and no retry (a re-drain would queue behind the very
+        computation that stalled; only process restart reclaims the
+        device, which is the honest limit of a host-side watchdog)."""
+        chunk = item.chunk
+        t0 = time.perf_counter()
+        deadline = time.monotonic() + self.watchdog_s
+        stalled = False
+        try:
+            # the stall site fires BEFORE the first readiness poll, so an
+            # injected delay_s fault deterministically blows the budget
+            faults.fire(
+                "drain.stall",
+                rids=[p.future.rid for p in chunk],
+                op=chunk[0].op.name,
+                size=len(chunk),
+            )
+            while not item.handle.is_ready():
+                if time.monotonic() >= deadline:
+                    stalled = True
+                    break
+                time.sleep(min(0.001, self.watchdog_s / 10))
+            stalled = stalled or time.monotonic() >= deadline
+        except Exception as e:  # noqa: BLE001 — a raising stall fault
+            report.host_idle_us += (time.perf_counter() - t0) * 1e6
+            item.handle.invalidate_memo()
+            for p in chunk:
+                self._fail_or_retry(
+                    item.sig, p, e, report, retried, tick_no,
+                    wrap=InflightError,
+                )
+            return False
+        report.host_idle_us += (time.perf_counter() - t0) * 1e6
+        if not stalled:
+            return True
+        report.watchdog_fires += 1
+        item.handle.invalidate_memo()
+        self._note_chunk_failure(item.sig, tick_no, report)
+        for p in chunk:
+            self._finish_fail(
+                p,
+                DrainStalledError(
+                    f"request rid={p.future.rid} ({p.op.name}): drain fence "
+                    f"not ready within the {self.watchdog_s:.3f}s watchdog "
+                    f"budget ({len(chunk)}-request chunk)"
+                ),
+                report,
+            )
+        return False
+
+    def _bucket_cap(self, sig: tuple) -> int:
+        """The bucket's effective batch cap: ``max_batch`` halved once per
+        degradation level (still a power of two), floored at 1."""
+        deg = self._degraded.get(sig)
+        if deg is None:
+            return self.max_batch
+        return max(1, self.max_batch >> deg.level)
+
+    def _oom_degrade(self, sig: tuple, report: TickReport) -> None:
+        """One device-OOM launch: halve the bucket's cap (until 1) and
+        shed half the drain memo — compiled programs for the old, larger
+        chunk sizes are exactly the entries pressure wants back."""
+        report.oom_events += 1
+        deg = self._degraded.setdefault(sig, _Degrade())
+        if (self.max_batch >> deg.level) > 1:
+            deg.level += 1
+        deg.healthy = 0
+        drain_memo_pressure()
+
+    def _note_chunk_failure(
+        self, sig: tuple, tick_no: int, report: TickReport
+    ) -> None:
+        """Account one isolated drain failure against the bucket's breaker.
+
+        Called at the single-request isolation leaf (and for a stalled
+        chunk), NOT at every bisect level — so one poisoned request in a
+        healthy chunk contributes one failure per tick, and its healthy
+        bucket-mates' successes reset the count before it can accumulate.
+        A failure during HALF_OPEN (the probe failed) re-trips immediately.
+        """
+        br = self._breakers.setdefault(sig, _Breaker())
+        br.failures += 1
+        if br.state == "half_open" or (
+            br.state == "closed" and br.failures >= self.breaker_threshold
+        ):
+            br.state = "open"
+            br.opened_tick = tick_no
+            report.breaker_trips += 1
+
+    def _note_chunk_success(self, sig: tuple, report: TickReport) -> None:
+        """One chunk drained clean: reset the breaker's failure count
+        (closing it if open/half-open — the probe succeeded) and advance
+        the bucket's degradation recovery."""
+        br = self._breakers.get(sig)
+        if br is not None:
+            br.failures = 0
+            if br.state != "closed":
+                br.state = "closed"
+                br.round_trips += 1
+                report.breaker_closes += 1
+        deg = self._degraded.get(sig)
+        if deg is not None:
+            deg.healthy += 1
+            if deg.healthy >= self.degrade_recovery:
+                deg.level -= 1
+                deg.healthy = 0
+                if deg.level <= 0:
+                    del self._degraded[sig]
+
+    # -- health + graceful shutdown (DESIGN.md §14) ----------------------------
+    def health(self) -> str:
+        """Server health: DRAINING once ``drain()`` started, DEGRADED while
+        any breaker is not closed or any bucket runs below its full batch
+        cap, HEALTHY otherwise."""
+        if self._draining:
+            return "DRAINING"
+        if any(br.state != "closed" for br in self._breakers.values()) or any(
+            deg.level > 0 for deg in self._degraded.values()
+        ):
+            return "DEGRADED"
+        return "HEALTHY"
+
+    def breakers(self) -> Dict[tuple, Dict[str, Any]]:
+        """Per-signature breaker snapshot (state, consecutive failures,
+        completed open->closed round trips) for introspection and gates."""
+        return {
+            sig: {
+                "state": br.state,
+                "failures": br.failures,
+                "round_trips": br.round_trips,
+            }
+            for sig, br in self._breakers.items()
+        }
+
+    def breaker_round_trips(self) -> int:
+        """Total completed open -> half_open -> closed breaker cycles."""
+        return sum(br.round_trips for br in self._breakers.values())
+
+    def drain(self, max_ticks: int = 1024) -> List[TickReport]:
+        """Graceful shutdown: reject all new submits, then tick until the
+        queue (including backoff-held retries) is flushed.  Every queued
+        future ends resolved or typed-failed.  ``max_ticks`` bounds the
+        flush (a safety rail — retry budgets are finite, so the queue
+        drains well before it); returns the per-tick reports."""
+        self._draining = True
+        reports: List[TickReport] = []
+        while self.pending() and len(reports) < max_ticks:
+            reports.append(self.tick())
+        return reports
+
     def _fail_or_retry(
         self,
         sig: tuple,
@@ -769,11 +1142,19 @@ class BatchServer:
 
         ``wrap`` types the terminal error for non-``ServeError`` causes:
         ``DrainError`` for synchronous drain failures, ``InflightError``
-        when the failure surfaced at deferred (in-flight) resolution."""
+        when the failure surfaced at deferred (in-flight) resolution.
+        Every call is one isolated drain failure, so it also feeds the
+        bucket's breaker (DESIGN.md §14)."""
+        self._note_chunk_failure(sig, tick_no, report)
         if not isinstance(e, _NON_RETRYABLE) and p.retries_left > 0:
             p.retries_left -= 1
             p.attempts += 1
-            p.not_before = tick_no + self.retry_backoff * (2 ** (p.attempts - 1))
+            cap = self.retry_backoff * (2 ** (p.attempts - 1))
+            # full jitter (armed via retry_jitter_seed): uniform in [1, cap]
+            # instead of the deterministic cap, so a bucket's worth of
+            # synchronized retries spreads across the backoff window
+            delay = cap if self._jitter_rng is None else self._jitter_rng.randint(1, cap)
+            p.not_before = tick_no + delay
             p.rebuild_datas()  # the failed drain may have mutated them
             retried.setdefault(sig, []).append(p)
             report.retried += 1

@@ -14,6 +14,14 @@ corrupts, or diverts exactly as specified — deterministically by default
                        when=lambda ctx: 7 in ctx["rids"], times=None):
         srv.tick()         # every drain containing request 7 fails
 
+    with faults.inject("drain.stall", delay_s=0.2):
+        srv.tick()         # the fence site SLEEPS 200ms (a hung drain)
+
+Effects compose per fault: ``delay_s`` sleeps at the site first, then
+``exc`` (if any) raises — a delay-only fault models a slow/hung path
+without failing it, which is what the watchdog budget (DESIGN.md §14)
+must catch.
+
 Sites (armed by name; arming an unknown name is an error):
 
     leaf.fn                 resolving a group's leaf kernel at program
@@ -40,6 +48,21 @@ Sites (armed by name; arming an unknown name is an error):
                             after the program was dispatched, exercising
                             memo invalidation and the no-half-resolved-
                             futures invariant
+    drain.stall             the fence over an overlapped drain hangs:
+                            fired inside ``DrainHandle.wait`` and the
+                            serving end-of-tick fence BEFORE readiness is
+                            polled (ctx: rids/op/size or epochs/leaves),
+                            so a ``delay_s`` fault here makes the fence
+                            blow its wall-clock budget — the hung-drain
+                            watchdog (DESIGN.md §14) must surface
+                            ``DrainStalledError``
+    launch.oom              a compiled-program launch fails with device
+                            OOM (ctx: batch, n_tasks, replay) — arm with
+                            ``ResourceExhausted`` (or any exception whose
+                            text matches XLA's RESOURCE_EXHAUSTED) to
+                            exercise adaptive degradation: cap halving,
+                            memo pressure shedding, split re-drains
+                            (DESIGN.md §14)
 
 Plan-mutation sites (DESIGN.md §11) — boolean sites whose consuming code
 CORRUPTS the schedule instead of raising, so the static verifier can be
@@ -63,6 +86,7 @@ from __future__ import annotations
 
 import random
 import threading
+import time
 from contextlib import contextmanager
 from typing import Any, Callable, Dict, List, Optional
 
@@ -75,6 +99,8 @@ KNOWN_SITES = frozenset(
         "split.value_dependent",
         "serve.drain",
         "drain.inflight",
+        "drain.stall",
+        "launch.oom",
         "plan.drop_edge",
         "plan.merge_groups",
         "plan.alias_lane",
@@ -104,6 +130,7 @@ class Fault:
         seed: int = 0,
         corrupt: Optional[Callable[[Any], Any]] = None,
         record: bool = False,
+        delay_s: float = 0.0,
     ):
         if site not in KNOWN_SITES:
             raise ValueError(
@@ -111,8 +138,11 @@ class Fault:
             )
         if not 0.0 <= p <= 1.0:
             raise ValueError(f"fault probability must be in [0, 1], got {p}")
+        if delay_s < 0:
+            raise ValueError(f"fault delay_s must be >= 0, got {delay_s}")
         self.site = site
         self.exc = exc
+        self.delay_s = delay_s
         self.when = when
         self.times = times
         self.after = after
@@ -141,6 +171,10 @@ class Fault:
         return True
 
     def _raise(self) -> None:
+        """Apply the fault's effects: sleep ``delay_s`` first (a slow/hung
+        path), then raise ``exc`` if armed (a failing one)."""
+        if self.delay_s > 0:
+            time.sleep(self.delay_s)
         exc = self.exc
         if callable(exc) and not isinstance(exc, BaseException):
             exc = exc()
@@ -170,6 +204,7 @@ def inject(
     seed: int = 0,
     corrupt: Optional[Callable[[Any], Any]] = None,
     record: bool = False,
+    delay_s: float = 0.0,
 ):
     """Arm ``site`` for the duration of the ``with`` block; yields the
     ``Fault`` so the caller can assert on ``fired``/``matches``/``log``.
@@ -178,6 +213,9 @@ def inject(
     transient-fault shape; ``times=None`` fires on every match — the
     deterministic poisoned-request shape.  ``after=k`` skips the first k
     matches; ``p``/``seed`` make firing probabilistic but reproducible.
+    ``delay_s`` sleeps at the site before (optionally) raising — a
+    delay-only fault (``exc=None``) models a slow or hung path, the shape
+    the watchdog budget hunts (DESIGN.md §14).
     """
     fault = Fault(
         site,
@@ -189,6 +227,7 @@ def inject(
         seed=seed,
         corrupt=corrupt,
         record=record,
+        delay_s=delay_s,
     )
     global _ENABLED
     with _LOCK:

@@ -64,6 +64,29 @@ def test_times_after_and_when():
         assert f.matches == 3 and f.fired == 1
 
 
+def test_delay_injection_sleeps_at_site():
+    import time
+
+    with faults.inject("drain.stall", delay_s=0.05) as f:
+        t0 = time.perf_counter()
+        faults.fire("drain.stall")  # delay-only: sleeps, does NOT raise
+        assert time.perf_counter() - t0 >= 0.05
+        assert f.fired == 1
+    # delay composes with an exception: sleep first, then raise
+    with faults.inject("drain.stall", RuntimeError("late"), delay_s=0.01):
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="late"):
+            faults.fire("drain.stall")
+        assert time.perf_counter() - t0 >= 0.01
+    with pytest.raises(ValueError, match="delay_s"):
+        faults.Fault("drain.stall", delay_s=-1.0)
+
+
+def test_self_healing_sites_registered():
+    assert {"drain.stall", "launch.oom"} <= faults.KNOWN_SITES
+    assert len(faults.KNOWN_SITES) == 12
+
+
 def test_probabilistic_firing_is_seeded():
     def run(seed):
         hits = []
